@@ -1,0 +1,63 @@
+"""3D-memory chip-balance study (paper §VIII.C, Fig 22).
+
+1024 SN40L-class chips, 2080 iso-area units split between compute and SRAM;
+sweep the compute fraction 20-80% under three off-chip memories: 2D DDR
+(100 GB/s), 2.5D HBM (1 TB/s), 3D-stacked (100 TB/s). Workload: one layer
+of a projected 100T-parameter GPT, TP-sharded over the pod.
+
+Paper observations reproduced: low-bandwidth memory wants more on-chip SRAM;
+3D memory lets the chip spend almost all area on compute.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.intrachip import optimize_intra_chip
+from repro.core.sharding import solve_sharding
+from repro.systems.chips import DDR_2D, HBM_25D, MEM_3D, SN40L
+from repro.systems.topology import torus2d, ring
+from repro.systems.chips import ICI
+
+from repro.workloads.llm import GPT_100T, gpt_layer_graph
+
+TITLE = "Fig 22: compute/SRAM area split under 2D DDR / 2.5D HBM / 3D memory"
+
+UNITS = 2080
+UNIT_FLOPS = SN40L.peak_flops / 1040          # one compute unit
+UNIT_SRAM = SN40L.sram_capacity / 1040        # one memory unit
+
+
+def run(quick: bool = False):
+    tp = 1024
+    topo = torus2d(tp, ICI)
+    g = gpt_layer_graph(dataclasses.replace(GPT_100T, batch=1))
+    sol = solve_sharding(g, tp, topo, [0, 1])
+    sharded = g.scaled(flop_scale=1.0 / tp, bytes_scale=1.0 / tp)
+    flops_per_chip = sharded.total_flops()
+
+    rows = []
+    best = {}
+    fracs = (0.2, 0.5, 0.8) if quick else (0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8)
+    for mem in (DDR_2D, HBM_25D, MEM_3D):
+        for frac in fracs:
+            n_comp = int(UNITS * frac)
+            chip = dataclasses.replace(
+                SN40L, tiles=n_comp, tile_flops=UNIT_FLOPS,
+                sram_capacity=(UNITS - n_comp) * UNIT_SRAM)
+            res = optimize_intra_chip(sharded, chip, mem, h_n=sol.h_n,
+                                      h_m=sol.h_m)
+            thru = flops_per_chip / res.total_time          # FLOP/s achieved
+            rows.append({
+                "memory": mem.name, "compute_frac": frac,
+                "achieved_tflops": thru / 1e12,
+                "peak_tflops": chip.peak_flops / 1e12,
+                "util": thru / chip.peak_flops,
+                "bottleneck": res.bottleneck,
+            })
+            if thru > best.get(mem.name, (0, 0))[0]:
+                best[mem.name] = (thru, frac)
+    for mname, (thru, frac) in best.items():
+        rows.append({"memory": mname, "compute_frac": f"best={frac}",
+                     "achieved_tflops": thru / 1e12, "peak_tflops": "",
+                     "util": "", "bottleneck": ""})
+    return rows

@@ -1,0 +1,89 @@
+"""Mapping ladder + hierarchical roofline (paper §VII, Table VI, Fig 18).
+
+GPT3 175B on 8 SN10 RDUs (DDR 200 GB/s, PCIe 25 GB/s):
+  non-dataflow (kbk) → vendor 4-partition dataflow → DFModel 8×1 ring →
+  DFModel 4×2 torus. Reports stepwise + cumulative speedups and each
+  mapping's two operational intensities (memory & network rooflines).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.intrachip import (evaluate_intra_assignment,
+                                  optimize_intra_chip)
+from repro.core.roofline import HierPoint
+from repro.core.sharding import solve_sharding
+from repro.systems.chips import DDR, PCIE, SN10
+from repro.systems.topology import ring, torus2d
+from repro.workloads.llm import GPT3_175B, gpt_layer_graph
+
+TITLE = "Table VI / Fig 18: GPT3-175B mapping ladder on 8×SN10"
+
+DDR_200 = dataclasses.replace(DDR, bandwidth=200e9)
+VENDOR = {"LN1": 0, "QKV": 0, "MHA1": 1, "Softmax": 1, "MHA2": 1,
+          "Proj": 1, "Add1": 1, "LN2": 1, "FFN0": 2, "FFN1": 3, "Add2": 3}
+
+
+def _roofline(name, intra, shard, tp):
+    g = gpt_layer_graph(dataclasses.replace(GPT3_175B, batch=1))
+    flops = g.total_flops() / tp
+    return HierPoint(name=name, flops=flops,
+                     dram_bytes=max(intra.dram_traffic, 1.0),
+                     net_bytes=max(shard.comm_bytes, 1.0),
+                     peak_flops=SN10.peak_flops,
+                     dram_bw=DDR_200.bandwidth, net_bw=PCIE.bandwidth)
+
+
+def run(quick: bool = False):
+    g = gpt_layer_graph(dataclasses.replace(GPT3_175B, batch=1))
+
+    def setup(tp, topo):
+        sol = solve_sharding(g, tp, topo, list(range(len(topo.dims))))
+        sharded = g.scaled(flop_scale=1.0 / tp, bytes_scale=1.0 / tp)
+        return sol, sharded
+
+    sol8, g8 = setup(8, ring(8, PCIE))
+    sol4, g4 = setup(4, torus2d(8, PCIE))
+
+    kbk = optimize_intra_chip(g8, SN10, DDR_200, h_n=sol8.h_n, h_m=sol8.h_m,
+                              mode="kbk")
+    vendor = evaluate_intra_assignment(
+        g8, [VENDOR[k.name] for k in g8.kernels], SN10, DDR_200,
+        h_n=sol8.h_n, h_m=sol8.h_m)
+    df81 = optimize_intra_chip(g8, SN10, DDR_200, h_n=sol8.h_n,
+                               h_m=sol8.h_m, p_max=8)
+    df42 = optimize_intra_chip(g4, SN10, DDR_200, h_n=sol4.h_n,
+                               h_m=sol4.h_m, p_max=8)
+
+    # system throughput: DP=2 on the 4×2 torus runs two replicas
+    ladder = [
+        ("non-dataflow (Calculon-style)", "8x1 ring", kbk.total_time, 1.0),
+        ("vendor 4-partition dataflow", "8x1 ring", vendor.total_time, None),
+        ("DFModel dataflow", "8x1 ring", df81.total_time, None),
+        ("DFModel dataflow", "4x2 torus (TP4xDP2)", df42.total_time / 2.0,
+         None),
+    ]
+    paper = [1.0, 4.05, 4.8, 6.13]
+    rows = []
+    prev = None
+    for (name, topo, t, _), pacc in zip(ladder, paper):
+        step = 1.0 if prev is None else prev / t
+        rows.append({
+            "mapping": name, "topology": topo, "time_per_ubatch_s": t,
+            "stepwise_x": step,
+            "accum_x": ladder[0][2] / t,
+            "paper_accum_x": pacc,
+        })
+        prev = t
+    # Fig 18 roofline points
+    for name, intra, sol, tp in [
+            ("kbk 8x1", kbk, sol8, 8), ("vendor 8x1", vendor, sol8, 8),
+            ("dfmodel 8x1", df81, sol8, 8), ("dfmodel 4x2", df42, sol4, 4)]:
+        pt = _roofline(name, intra, sol, tp)
+        rows.append({
+            "mapping": f"roofline:{name}", "topology": "",
+            "time_per_ubatch_s": intra.total_time,
+            "stepwise_x": pt.oi_mem, "accum_x": pt.oi_net,
+            "paper_accum_x": f"bound={pt.bound}",
+        })
+    return rows

@@ -1,0 +1,54 @@
+"""Dataflow vs non-dataflow over the memory design space (paper Fig 19).
+
+300-TFLOPS accelerator, SRAM ∈ {150, 300, 500} MB × DRAM bw ∈ {100, 300,
+600} GB/s; GPT3-175B on 8 chips in a 4×2 torus. Reports both mappings'
+utilization per point and the dataflow/non-dataflow ratio (paper: dataflow
+upper-bounds non-dataflow, 1.63× on average).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.intrachip import optimize_intra_chip
+from repro.core.sharding import solve_sharding
+from repro.systems.chips import DDR, PCIE, SN10
+from repro.systems.topology import torus2d
+from repro.workloads.llm import GPT3_175B, gpt_layer_graph
+
+from .common import geomean
+
+TITLE = "Fig 19: dataflow vs non-dataflow across SRAM × DRAM-bw design space"
+
+
+def run(quick: bool = False):
+    tp = 4
+    topo = torus2d(8, PCIE)
+    g = gpt_layer_graph(dataclasses.replace(GPT3_175B, batch=1))
+    sol = solve_sharding(g, tp, topo, [0, 1])
+    sharded = g.scaled(flop_scale=1.0 / tp, bytes_scale=1.0 / tp)
+    chip300 = dataclasses.replace(SN10, tiles=1000, tile_flops=300e12 / 1000)
+    flops_per_chip = sharded.total_flops()
+
+    rows, ratios = [], []
+    for sram_mb in (150, 300, 500):
+        for bw_gb in (100, 300, 600):
+            chip = dataclasses.replace(chip300, sram_capacity=sram_mb * 1e6)
+            mem = dataclasses.replace(DDR, bandwidth=bw_gb * 1e9)
+            df = optimize_intra_chip(sharded, chip, mem, h_n=sol.h_n,
+                                     h_m=sol.h_m)
+            kbk = optimize_intra_chip(sharded, chip, mem, h_n=sol.h_n,
+                                      h_m=sol.h_m, mode="kbk")
+            u_df = flops_per_chip / (df.total_time * chip.peak_flops)
+            u_kbk = flops_per_chip / (kbk.total_time * chip.peak_flops)
+            ratios.append(kbk.total_time / df.total_time)
+            rows.append({
+                "sram_mb": sram_mb, "dram_gbps": bw_gb,
+                "util_dataflow": u_df, "util_kbk": u_kbk,
+                "dataflow_x": kbk.total_time / df.total_time,
+                "df_partitions": df.n_partitions,
+            })
+    rows.append({"sram_mb": "avg", "dram_gbps": "",
+                 "util_dataflow": "", "util_kbk": "",
+                 "dataflow_x": geomean(ratios),
+                 "df_partitions": "paper: 1.63x"})
+    return rows

@@ -1,0 +1,66 @@
+"""§Roofline deliverable: the dry-run roofline table.
+
+Reads results/dryrun/*.json (produced by ``python -m repro.launch.dryrun``)
+and reports, per (arch × shape × mesh): the three roofline terms, the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPS, the roofline fraction, and
+DFModel's own prediction for the same cell.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+TITLE = "dry-run roofline: all (arch x shape x mesh) cells (TPU v5e terms)"
+
+
+def load_cells(pattern: str = "*.json") -> list[dict]:
+    out = []
+    for p in sorted(RESULTS.glob(pattern)):
+        try:
+            out.append(json.loads(p.read_text()))
+        except Exception:
+            continue
+    return out
+
+
+def rows_from(cells: list[dict]) -> list[dict]:
+    rows = []
+    for r in cells:
+        rf = r.get("roofline", {})
+        plan = r.get("dfmodel_plan", {})
+        plan_t = plan.get("iter_time_s", plan.get("total_time_s", ""))
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "mesh": "2x16x16" if r["multi_pod"] else "16x16",
+            "t_comp_s": rf.get("t_compute_s"),
+            "t_mem_s": rf.get("t_memory_s"),
+            "t_coll_s": rf.get("t_collective_s"),
+            "dominant": rf.get("dominant"),
+            "useful": rf.get("useful_ratio"),
+            "frac": rf.get("roofline_fraction"),
+            "GiB/dev": r["memory"]["bytes_per_device"] / 2 ** 30,
+            "dfmodel_t_s": plan_t,
+            "compile_s": r.get("compile_s"),
+        })
+    return rows
+
+
+def run(quick: bool = False):
+    cells = load_cells()
+    if not cells:
+        return [{"note": "no dry-run artifacts; run "
+                 "`PYTHONPATH=src python -m repro.launch.dryrun --all`"}]
+    rows = rows_from(cells)
+    # summary: per-mesh dominant-term census
+    census: dict = {}
+    for r in rows:
+        key = (r["mesh"], r["dominant"])
+        census[key] = census.get(key, 0) + 1
+    for (mesh, dom), n in sorted(census.items()):
+        rows.append({"arch": "census", "shape": "", "mesh": mesh,
+                     "t_comp_s": "", "t_mem_s": "", "t_coll_s": "",
+                     "dominant": dom, "useful": "", "frac": "",
+                     "GiB/dev": "", "dfmodel_t_s": "", "compile_s": n})
+    return rows

@@ -1,0 +1,55 @@
+"""Speculative decoding study (paper §VIII.B, Fig 21).
+
+Llama3-405B target served on 16 SN40L; drafts ∈ {68M, 8B, 70B};
+schemes ∈ {sequence, tree}; sweep window K and acceptance rate.
+Draft/verify step times come from the serving model (memory-bound decode).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.serving import speculative_throughput
+from repro.systems.chips import SN40L
+from repro.workloads.llm import (LLAMA3_405B, LLAMA3_70B, LLAMA3_8B,
+                                 LLAMA_68M, LLMShape)
+
+TITLE = "Fig 21: speculative decoding — draft size × scheme × window × accept"
+
+N_CHIPS = 16
+MEM_BW = 1600e9  # SN40L HBM tier
+
+
+def _decode_step_time(shape: LLMShape) -> float:
+    """Memory-bound decode step: stream active params once per token across
+    the TP group (the regime Fig 20 shows for decode)."""
+    bytes_ = shape.active_params * 2.0
+    return bytes_ / (MEM_BW * N_CHIPS) + 20e-6  # + per-step launch/net alpha
+
+
+def run(quick: bool = False):
+    target_t = _decode_step_time(LLAMA3_405B)
+    drafts = {"68M": LLAMA_68M, "8B": LLAMA3_8B, "70B": LLAMA3_70B}
+    accepts = (0.6, 0.8) if quick else (0.5, 0.6, 0.7, 0.8, 0.9)
+    windows = (2, 4, 8) if quick else (1, 2, 4, 6, 8, 10)
+    base = 1.0 / target_t  # plain autoregressive decoding
+
+    rows = []
+    for dname, dshape in drafts.items():
+        draft_t = _decode_step_time(dshape)
+        for scheme in ("sequence", "tree"):
+            best = (0.0, None, None)
+            for k in windows:
+                for a in accepts:
+                    tps = speculative_throughput(draft_t, target_t, k, a,
+                                                 scheme)
+                    if tps > best[0]:
+                        best = (tps, k, a)
+                    rows.append({
+                        "draft": dname, "scheme": scheme, "window": k,
+                        "accept": a, "tok_s": tps,
+                        "speedup_vs_plain": tps / base,
+                    })
+            rows.append({"draft": dname, "scheme": scheme, "window": "best",
+                         "accept": best[2], "tok_s": best[0],
+                         "speedup_vs_plain": best[0] / base})
+    return rows

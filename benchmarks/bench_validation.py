@@ -1,0 +1,109 @@
+"""Validation benchmarks (paper Figs 6, 7, 8).
+
+Fig 8: fix 1024 A100s, sweep (TP, PP, DP); report the iteration-time
+breakdown per combo (fwd/bwd/bubble/comms) — the Calculon comparison grid.
+
+Fig 7: fix 1024 H100s, sweep the high-bandwidth NVLink domain size with
+switch scale-out (the Rail-Only design); utilization should be nearly flat
+above a modest domain size — Rail-Only's thesis.
+
+Fig 6: modeled utilization of LLM training on the four Table-V chips vs the
+paper's measured-performance anchors.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.interchip import optimize_inter_chip
+from repro.systems.chips import (A100, H100, HBM, NVLINK, SN30, TPU_V4,
+                                 WSE2)
+from repro.systems.system import SystemSpec
+from repro.systems.topology import Topology, TopologyDim, dgx1
+from repro.workloads.llm import GPT3_1T, GPT3_175B, gpt_workload
+
+TITLE = "validation: Fig 8 (TP/PP/DP sweep), Fig 7 (rail-only), Fig 6 anchors"
+
+
+def fig8_parallelism_sweep(quick: bool) -> list[dict]:
+    n = 128 if quick else 1024
+    system = SystemSpec("dgx_a100", A100, HBM, dgx1(n, NVLINK))
+    work = gpt_workload(GPT3_1T if not quick else GPT3_175B,
+                        global_batch=512, microbatch=1)
+    combos = [(8, 16, n // 128), (8, 8, n // 64), (4, 16, n // 64),
+              (16, 8, n // 128), (8, 4, n // 32)]
+    rows = []
+    for tp, pp, dp in combos:
+        if tp * pp * dp != n:
+            continue
+        try:
+            p = optimize_inter_chip(work, system, fixed=(tp, pp, dp))
+        except ValueError:
+            continue
+        total = p.iter_time
+        rows.append({
+            "fig": "8", "tp": tp, "pp": pp, "dp": dp,
+            "iter_s": total, "util": p.utilization,
+            "fwd%": 100 * p.breakdown["fwd"] / total,
+            "bwd%": 100 * p.breakdown["bwd"] / total,
+            "bubble%": 100 * p.breakdown["bubble"] / total,
+            "tp_comm%": 100 * p.breakdown["tp_comm"] / total,
+            "dp_comm%": 100 * p.breakdown["dp_exposed"] / total,
+        })
+    return rows
+
+
+def fig7_rail_only(quick: bool) -> list[dict]:
+    n = 128 if quick else 1024
+    work = gpt_workload(GPT3_1T if not quick else GPT3_175B,
+                        global_batch=512, microbatch=1)
+    rows = []
+    for domain in (4, 8, 16, 32):
+        if domain > n:
+            continue
+        topo = Topology(f"rail{domain}",
+                        (TopologyDim(domain, "fc", NVLINK),
+                         TopologyDim(n // domain, "switch", NVLINK)))
+        system = SystemSpec(f"h100_rail{domain}", H100, HBM, topo)
+        # rail-only semantics: TP confined to the NVLink domain
+        p = optimize_inter_chip(work, system, max_tp=domain,
+                                allow_subdivision=False)
+        rows.append({"fig": "7", "nvlink_domain": domain,
+                     "util": p.utilization, "iter_s": p.iter_time,
+                     "plan": f"tp{p.tp}/pp{p.pp}/dp{p.dp}"})
+    # Rail-Only claim: utilization roughly flat in domain size
+    if rows:
+        utils = [r["util"] for r in rows]
+        rows.append({"fig": "7", "nvlink_domain": "spread",
+                     "util": max(utils) - min(utils),
+                     "iter_s": 0.0, "plan": "max-min (flat ⇒ small)"})
+    return rows
+
+
+# paper Fig 6 measured-utilization anchors (approximate, read from figure)
+_MEASURED_UTIL = {"H100": 0.40, "TPUv4": 0.45, "SN30": 0.55, "WSE2": 0.35}
+
+
+def fig6_anchors(quick: bool) -> list[dict]:
+    """Modeled utilization per chip with the chip's NATIVE execution model
+    (kbk for GPU/TPU, dataflow for RDU/WSE) — the §VI setting — against the
+    paper's measured anchors."""
+    from repro.core.dse import sweep
+    n = 64 if quick else 256
+    rows = []
+    pts = sweep(lambda sys_: gpt_workload(GPT3_175B, global_batch=256,
+                                          microbatch=1),
+                n_chips=n, chips=("H100", "TPUv4", "SN30", "WSE2"),
+                topologies=("dgx1",), mem_net=(("HBM", "NVLink"),),
+                max_tp=64)
+    for p in pts:
+        meas = _MEASURED_UTIL[p.system.chip.name]
+        rows.append({"fig": "6", "chip": p.system.chip.name,
+                     "modeled_util": p.utilization,
+                     "paper_measured_util": meas,
+                     "model/measured": p.utilization / meas})
+    return rows
+
+
+def run(quick: bool = False):
+    return fig8_parallelism_sweep(quick) + fig7_rail_only(quick) \
+        + fig6_anchors(quick)

@@ -1,0 +1,55 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+
+def timed(fn: Callable, *args, **kwargs):
+    t0 = time.perf_counter()
+    out = fn(*args, **kwargs)
+    return out, time.perf_counter() - t0
+
+
+def table(rows: list[dict], cols: list[str] | None = None,
+          floatfmt: str = "{:.4g}") -> str:
+    """Aligned text table; heterogeneous row schemas become sub-tables."""
+    if not rows:
+        return "(no rows)"
+    if cols is None:
+        groups: list[tuple[tuple, list[dict]]] = []
+        for r in rows:
+            key = tuple(r.keys())
+            if groups and groups[-1][0] == key:
+                groups[-1][1].append(r)
+            else:
+                groups.append((key, [r]))
+        if len(groups) > 1:
+            return "\n\n".join(table(g, list(k)) for k, g in groups)
+        cols = list(groups[0][0])
+    widths = {c: max(len(c), *(len(_fmt(r.get(c, ""), floatfmt))
+                               for r in rows)) for c in cols}
+    head = "  ".join(c.ljust(widths[c]) for c in cols)
+    sep = "  ".join("-" * widths[c] for c in cols)
+    body = "\n".join("  ".join(_fmt(r.get(c, ""), floatfmt).ljust(widths[c])
+                               for c in cols) for r in rows)
+    return f"{head}\n{sep}\n{body}"
+
+
+def _fmt(v, floatfmt) -> str:
+    if isinstance(v, float):
+        return floatfmt.format(v)
+    return str(v)
+
+
+def geomean(xs) -> float:
+    import math
+    xs = [x for x in xs if x > 0]
+    if not xs:
+        return 0.0
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    """The harness's one-line CSV contract: name,us_per_call,derived."""
+    print(f"CSV,{name},{seconds * 1e6:.1f},{derived}")

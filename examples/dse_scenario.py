@@ -1,0 +1,40 @@
+"""Design-space exploration scenario (paper §VI.C in miniature):
+
+"We must train GPT3-175B on 64 accelerators. Which chip, memory,
+interconnect and topology should we buy, for throughput / for cost
+efficiency / for power efficiency?"
+
+  PYTHONPATH=src python examples/dse_scenario.py
+"""
+from repro.core.dse import sweep
+from repro.workloads.llm import GPT3_175B, gpt_workload
+
+
+def main():
+    pts = sweep(lambda sys_: gpt_workload(GPT3_175B, global_batch=512,
+                                          microbatch=1),
+                n_chips=64,
+                chips=("H100", "TPUv4", "SN30"),
+                topologies=("torus2d", "dragonfly", "dgx2"),
+                mem_net=(("DDR", "PCIe"), ("HBM", "NVLink")),
+                max_tp=64)
+    pts = [p for p in pts if p.plan.feasible]
+    print(f"{len(pts)} feasible design points\n")
+
+    for metric, label in [("utilization", "throughput utilization"),
+                          ("cost_eff", "cost efficiency (FLOP/s/$)"),
+                          ("power_eff", "power efficiency (FLOP/s/W)")]:
+        best = max(pts, key=lambda p: getattr(p, metric))
+        r = best.row()
+        print(f"best {label}:")
+        print(f"  {r['chip']} + {r['memory']} + {r['link']} on "
+              f"{r['topology']}  (TP={r['tp']} PP={r['pp']} DP={r['dp']})")
+        print(f"  util={r['utilization']:.3f}  "
+              f"cost={r['cost_eff_gflops_per_usd']:.2f} GFLOP/s/$  "
+              f"power={r['power_eff_gflops_per_w']:.1f} GFLOP/s/W")
+        print(f"  latency split: compute {r['t_compute']:.0%} / "
+              f"memory {r['t_memory']:.0%} / network {r['t_network']:.0%}\n")
+
+
+if __name__ == "__main__":
+    main()

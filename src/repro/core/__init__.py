@@ -1,0 +1,49 @@
+"""DFModel core — the paper's contribution as a library.
+
+Public surface:
+  graph IR            : DataflowGraph, Kernel, Tensor, KernelKind
+  matrices (Eq. 1-4)  : assignment_matrix, matrix_B/D/L/H
+  sharding (Fig 4)    : solve_sharding, Scheme
+  inter-chip (§IV)    : TrainWorkload, optimize_inter_chip, InterChipPlan
+  intra-chip (§V)     : optimize_intra_chip, IntraChipResult
+  solver              : minmax_partition, minsum_partition, branch_and_bound
+  roofline (Fig 18)   : HierPoint, RooflineTerms
+  DSE (§VI.C)         : sweep, DesignPoint
+  serving (§VIII)     : serving_sweep, speculative_throughput
+  plan (runtime glue) : plan_for → MappingPlan consumed by repro.launch
+"""
+from .graph import DataflowGraph, Kernel, KernelKind, Tensor, chain_graph
+from .matrices import (assignment_matrix, matrix_B, matrix_D, matrix_H,
+                       matrix_L, partition_summaries, validate_assignment)
+from .sharding import Scheme, ShardingSolution, solve_sharding
+from .solver import (branch_and_bound, bounds_to_assign, design_space_size,
+                     enumerate_parallelism, minmax_partition, minsum_partition)
+from .utilization import gemm_utilization, kernel_utilization
+from .interchip import InterChipPlan, TrainWorkload, optimize_inter_chip
+from .intrachip import IntraChipResult, optimize_intra_chip
+from .roofline import (HierPoint, RooflineTerms, V5E_HBM_BW, V5E_ICI_BW,
+                       V5E_PEAK_FLOPS)
+from .costpower import (cost_efficiency, power_efficiency, silicon_power_w,
+                        silicon_price_usd)
+from .dse import DesignPoint, sweep
+from .serving import (ServingPoint, SpecDecodePoint, expected_accepted,
+                      serving_sweep, speculative_throughput)
+
+__all__ = [
+    "DataflowGraph", "Kernel", "KernelKind", "Tensor", "chain_graph",
+    "assignment_matrix", "matrix_B", "matrix_D", "matrix_H", "matrix_L",
+    "partition_summaries", "validate_assignment",
+    "Scheme", "ShardingSolution", "solve_sharding",
+    "branch_and_bound", "bounds_to_assign", "design_space_size",
+    "enumerate_parallelism", "minmax_partition", "minsum_partition",
+    "gemm_utilization", "kernel_utilization",
+    "InterChipPlan", "TrainWorkload", "optimize_inter_chip",
+    "IntraChipResult", "optimize_intra_chip",
+    "HierPoint", "RooflineTerms", "V5E_HBM_BW", "V5E_ICI_BW",
+    "V5E_PEAK_FLOPS",
+    "cost_efficiency", "power_efficiency", "silicon_power_w",
+    "silicon_price_usd",
+    "DesignPoint", "sweep",
+    "ServingPoint", "SpecDecodePoint", "expected_accepted", "serving_sweep",
+    "speculative_throughput",
+]

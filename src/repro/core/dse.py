@@ -1,0 +1,117 @@
+"""Design space exploration driver (paper §VI.C, Figs 10-17).
+
+Sweeps accelerator × topology × memory × interconnect for a workload,
+running the full two-level optimization per design point and reporting
+utilization, cost efficiency, power efficiency, and the compute/memory/
+network latency breakdown.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable
+
+from ..systems.chips import (CHIPS, INTERCONNECTS, MEMORIES, ChipSpec,
+                             InterconnectSpec, MemorySpec)
+from ..systems.system import SystemSpec
+from ..systems.topology import TOPOLOGIES
+from .costpower import cost_efficiency, power_efficiency
+from .interchip import InterChipPlan, TrainWorkload, optimize_inter_chip
+from .intrachip import optimize_intra_chip
+
+
+@dataclasses.dataclass
+class DesignPoint:
+    system: SystemSpec
+    plan: InterChipPlan
+    utilization: float
+    cost_eff: float                 # FLOP/s per USD
+    power_eff: float                # FLOP/s per W
+    latency_breakdown: dict[str, float]
+
+    def row(self) -> dict:
+        return {
+            "chip": self.system.chip.name,
+            "memory": self.system.memory.name,
+            "topology": self.system.topology.name,
+            "link": self.system.topology.dims[0].link.name,
+            "tp": self.plan.tp, "pp": self.plan.pp, "dp": self.plan.dp,
+            "feasible": self.plan.feasible,
+            "utilization": self.utilization,
+            "cost_eff_gflops_per_usd": self.cost_eff / 1e9,
+            "power_eff_gflops_per_w": self.power_eff / 1e9,
+            **{f"t_{k}": v for k, v in self.latency_breakdown.items()},
+        }
+
+
+DEFAULT_CHIPS = ("H100", "TPUv4", "SN30", "WSE2")
+DEFAULT_TOPOLOGIES = ("torus2d", "torus3d", "dragonfly", "dgx1", "dgx2")
+DEFAULT_MEM_NET = (("DDR", "PCIe"), ("DDR", "NVLink"),
+                   ("HBM", "PCIe"), ("HBM", "NVLink"))
+
+
+def sweep(work_fn: Callable[[SystemSpec], TrainWorkload],
+          n_chips: int = 1024,
+          chips: Iterable[str] = DEFAULT_CHIPS,
+          topologies: Iterable[str] = DEFAULT_TOPOLOGIES,
+          mem_net: Iterable[tuple[str, str]] = DEFAULT_MEM_NET,
+          max_tp: int | None = 64, max_pp: int | None = None,
+          execution: str = "auto") -> list[DesignPoint]:
+    """The 80-system cartesian sweep (4 chips × 5 topologies × 4 mem/net)."""
+    points: list[DesignPoint] = []
+    for chip_name in chips:
+        chip = CHIPS[chip_name]
+        for mem_name, net_name in mem_net:
+            mem, net = MEMORIES[mem_name], INTERCONNECTS[net_name]
+            for topo_name in topologies:
+                topo = TOPOLOGIES[topo_name](n_chips, net)
+                system = SystemSpec(
+                    f"{chip_name}-{mem_name}-{net_name}-{topo_name}",
+                    chip, mem, topo)
+                work = work_fn(system)
+                try:
+                    plan = optimize_inter_chip(work, system, max_tp=max_tp,
+                                               max_pp=max_pp,
+                                               execution=execution)
+                except ValueError:
+                    continue
+                points.append(_to_point(work, system, plan, execution))
+    return points
+
+
+def _to_point(work: TrainWorkload, system: SystemSpec, plan: InterChipPlan,
+              execution: str) -> DesignPoint:
+    # refine the critical stage with the intra-chip pass for the breakdown.
+    # execution='auto' follows the chip's native model: spatial-dataflow
+    # chips (RDU/WSE) fuse on-chip, instruction chips (GPU/TPU) run
+    # kernel-by-kernel — the paper's §VI.C setting.
+    if execution == "auto":
+        mode = "dataflow" if system.chip.dataflow else "kbk"
+    else:
+        mode = execution
+    layer = work.layer_graph.scaled(
+        flop_scale=1.0 / plan.tp, bytes_scale=1.0 / plan.tp)
+    intra = optimize_intra_chip(layer, system.chip, system.memory,
+                                h_n=plan.sharding.h_n, h_m=plan.sharding.h_m,
+                                mode=mode)
+    total = intra.t_comp.sum() + intra.t_mem.sum() + intra.t_net.sum()
+    util = plan.utilization
+    # memory-bound refinement: if intra-chip memory time dominates the
+    # inter-chip estimate, derate utilization accordingly
+    if intra.total_time > 0 and plan.t_stage_fwd > 0:
+        per_layer_inter = max(plan.t_comp_stage, plan.t_net_stage) / max(
+            1, _stage_layers(plan, work))
+        derate = min(1.0, per_layer_inter / intra.total_time)
+        util = plan.utilization * derate
+    breakdown = {
+        "compute": float(intra.t_comp.sum() / total) if total else 0.0,
+        "memory": float(intra.t_mem.sum() / total) if total else 0.0,
+        "network": float(intra.t_net.sum() / total) if total else 0.0,
+    }
+    return DesignPoint(system, plan, util,
+                       cost_efficiency(util, system),
+                       power_efficiency(util, system), breakdown)
+
+
+def _stage_layers(plan: InterChipPlan, work: TrainWorkload) -> int:
+    import math
+    return math.ceil(work.n_layers / plan.pp)

@@ -1,0 +1,313 @@
+"""Inter-chip optimization pass (paper §IV).
+
+Searches (TP, PP, DP) degrees × network-dimension assignments × per-kernel
+sharding schemes × PP stage partitions, minimizing the critical per-stage time
+
+    t_cri_inter[i] = max(t_comp[i], t_net[i], t_p2p[i])        (Eq. 7)
+
+and, for training, composes the stages into a 1F1B pipelined iteration with a
+DP gradient all-reduce (the Calculon-comparable iteration model used in the
+paper's Fig 8 validation and the DSE of §VI).
+
+Deviation from the paper noted in DESIGN.md: the paper forbids subdividing a
+network dimension across strategies; its own Fig 8 sweep (TP=2..64 on fixed
+systems) requires it, so we allow contiguous subdivision (a ring splits into
+smaller rings, fc into fc, switch into switch) behind ``allow_subdivision``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Sequence
+
+import numpy as np
+
+from ..systems.system import SystemSpec
+from ..systems.topology import Topology, TopologyDim
+from .graph import DataflowGraph
+from .sharding import ShardingSolution, solve_sharding
+from .solver import enumerate_parallelism, minmax_partition
+from .utilization import kernel_utilization
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainWorkload:
+    """A training workload at microbatch granularity.
+
+    ``layer_graph`` describes ONE repeated layer for ONE microbatch
+    (unsharded); ``pre_graph``/``post_graph`` are the embedding / LM-head
+    blocks. FLOPs are forward-pass; backward is modeled as 2× forward compute
+    and 2× the TP collective volume (dgrad + wgrad all-reduces — the paper's
+    "four all-reduces per layer per iteration").
+    """
+
+    name: str
+    layer_graph: DataflowGraph
+    n_layers: int
+    global_batch: int            # sequences per iteration
+    microbatch: int = 1          # sequences per pipeline microbatch
+    pre_graph: DataflowGraph | None = None
+    post_graph: DataflowGraph | None = None
+    bwd_flop_mult: float = 2.0
+    bwd_comm_mult: float = 1.0   # bwd TP comm ≈ fwd TP comm
+    optimizer_bytes_per_param_byte: float = 8.0  # bf16 w+g, fp32 master+m+v
+
+    def total_weight_bytes(self) -> float:
+        w = self.layer_graph.total_weight_bytes() * self.n_layers
+        for g in (self.pre_graph, self.post_graph):
+            if g is not None:
+                w += g.total_weight_bytes()
+        return w
+
+    def total_fwd_flops_per_seq(self) -> float:
+        f = self.layer_graph.total_flops() * self.n_layers / self.microbatch
+        for g in (self.pre_graph, self.post_graph):
+            if g is not None:
+                f += g.total_flops() / self.microbatch
+        return f
+
+
+@dataclasses.dataclass
+class InterChipPlan:
+    tp: int
+    pp: int
+    dp: int
+    sharding: ShardingSolution
+    stage_bounds: list[int]          # layer-block start indices per stage
+    t_stage_fwd: float               # critical stage time (Eq. 7), seconds
+    t_comp_stage: float
+    t_net_stage: float
+    t_p2p_stage: float
+    n_micro: int
+    iter_time: float
+    breakdown: dict[str, float]      # fwd/bwd/bubble/tp_comm/pp_comm/dp_comm
+    utilization: float               # model FLOPs / (T · chips · peak)
+    per_chip_mem_bytes: float
+    feasible: bool
+    tp_topology: Topology | None = None
+    dp_topology: Topology | None = None
+
+    def summary(self) -> str:
+        return (f"TP={self.tp} PP={self.pp} DP={self.dp} "
+                f"iter={self.iter_time * 1e3:.2f}ms util={self.utilization:.3f}"
+                f" mem/chip={self.per_chip_mem_bytes / 1e9:.1f}GB"
+                f"{'' if self.feasible else ' INFEASIBLE'}")
+
+
+def _subdivide_dims(topology: Topology, degrees: tuple[int, int, int],
+                    allow_subdivision: bool) -> list[tuple[Topology, ...]] :
+    """Assign topology dims to (tp, pp, dp), innermost dims to TP first.
+
+    Returns a list of candidate (tp_topo, pp_topo, dp_topo) tuples (possibly
+    several orderings); empty if infeasible.
+    """
+    out = []
+    for perm in set(itertools.permutations(range(3))):
+        need = [degrees[i] for i in perm]  # consume in this strategy order
+        pieces: list[list[TopologyDim]] = [[], [], []]
+        ok = True
+        di = 0
+        dims = list(topology.dims)
+        remaining = dims[di].size if dims else 1
+        for s_pos, s in enumerate(perm):
+            want = need[s_pos]
+            while want > 1:
+                if di >= len(dims):
+                    ok = False
+                    break
+                d = dims[di]
+                g = math.gcd(want, remaining)
+                if g == 1:
+                    if remaining == 1:
+                        di += 1
+                        remaining = dims[di].size if di < len(dims) else 0
+                        continue
+                    ok = False
+                    break
+                take = g if allow_subdivision else remaining
+                if not allow_subdivision and remaining != g:
+                    ok = False
+                    break
+                if want % take:
+                    ok = False
+                    break
+                pieces[s].append(TopologyDim(take, d.kind, d.link))
+                want //= take
+                remaining //= take
+                if remaining == 1:
+                    di += 1
+                    remaining = dims[di].size if di < len(dims) else 0
+            if not ok:
+                break
+        if ok:
+            topos = tuple(
+                Topology(f"{topology.name}/{'tpd'[i]}", tuple(pieces[i]) or
+                         (TopologyDim(1, "ring", topology.dims[0].link),))
+                for i in range(3))
+            out.append(topos)
+    # dedupe by structure
+    seen, uniq = set(), []
+    for t3 in out:
+        key = tuple(tuple((d.size, d.kind) for d in t.dims) for t in t3)
+        if key not in seen:
+            seen.add(key)
+            uniq.append(t3)
+    return uniq
+
+
+# sharding solutions are pure functions of (graph, tp, topo-structure);
+# the (tp, pp, dp) sweep revisits the same key hundreds of times
+_SHARD_CACHE: dict = {}
+
+
+def _cached_sharding(graph: DataflowGraph, tp: int, topo: Topology,
+                     dims) -> ShardingSolution:
+    key = (id(graph), graph.name, tp,
+           tuple((d.size, d.kind, d.link.name, d.link.bandwidth)
+                 for d in topo.dims))
+    sol = _SHARD_CACHE.get(key)
+    if sol is None:
+        sol = solve_sharding(graph, tp, topo, dims)
+        if len(_SHARD_CACHE) > 4096:
+            _SHARD_CACHE.clear()
+        _SHARD_CACHE[key] = sol
+    return sol
+
+
+def evaluate_plan(work: TrainWorkload, system: SystemSpec,
+                  tp: int, pp: int, dp: int,
+                  tp_topo: Topology, pp_topo: Topology, dp_topo: Topology,
+                  execution: str = "dataflow") -> InterChipPlan | None:
+    """Price one (tp, pp, dp, dim-assignment) point."""
+    chip = system.chip
+    peak = chip.peak_flops
+    tdims = list(range(len(tp_topo.dims)))
+
+    # --- TP sharding of the layer graph (Eq. 5/6 costs) ---------------------
+    shard = _cached_sharding(work.layer_graph, tp, tp_topo, tdims)
+
+    # per-layer fwd times on the TP group
+    f = np.array([k.flops for k in work.layer_graph.kernels])
+    u = np.array([kernel_utilization(k) for k in work.layer_graph.kernels])
+    ff = np.array([s.flop_factor for s in shard.schemes])
+    t_comp_layer = float(((f * ff) / u).sum() / peak)
+    t_net_layer = float(sum(shard.h_n) + sum(shard.h_m))
+
+    def block(graph: DataflowGraph | None) -> tuple[float, float, float]:
+        if graph is None:
+            return 0.0, 0.0, 0.0
+        s = _cached_sharding(graph, tp, tp_topo, tdims)
+        fb = np.array([k.flops for k in graph.kernels])
+        ub = np.array([kernel_utilization(k) for k in graph.kernels])
+        ffb = np.array([x.flop_factor for x in s.schemes])
+        return (float(((fb * ffb) / ub).sum() / peak),
+                float(sum(s.h_n) + sum(s.h_m)),
+                graph.total_weight_bytes())
+
+    pre = block(work.pre_graph)
+    post = block(work.post_graph)
+
+    # --- PP stage partition over [pre] + layers + [post] (minmax DP) --------
+    items_comp = [pre[0]] + [t_comp_layer] * work.n_layers + [post[0]]
+    items_net = [pre[1]] + [t_net_layer] * work.n_layers + [post[1]]
+    items = [max(c, nn) for c, nn in zip(items_comp, items_net)]
+    bounds, _ = minmax_partition(items, pp)
+
+    # boundary activation bytes (largest tensor leaving a layer), sharded by tp
+    boundary_b = max((t.bytes_ for t in work.layer_graph.tensors),
+                     default=0.0) / tp
+    t_p2p = pp_topo.p2p(boundary_b, list(range(len(pp_topo.dims)))) if pp > 1 else 0.0
+
+    stage_comp = np.zeros(len(bounds))
+    stage_net = np.zeros(len(bounds))
+    nitems = len(items)
+    for g, start in enumerate(bounds):
+        end = bounds[g + 1] if g + 1 < len(bounds) else nitems
+        stage_comp[g] = sum(items_comp[start:end])
+        stage_net[g] = sum(items_net[start:end])
+    t_comp_stage = float(stage_comp.max())
+    t_net_stage = float(stage_net.max())
+    t_stage = max(t_comp_stage, t_net_stage, t_p2p)        # Eq. 7
+
+    # --- training iteration (1F1B) ------------------------------------------
+    if work.global_batch % (dp * work.microbatch):
+        return None
+    n_micro = work.global_batch // (dp * work.microbatch)
+    if n_micro < 1:
+        return None
+    t_fwd = t_stage
+    t_bwd_comp = t_comp_stage * work.bwd_flop_mult
+    t_bwd_net = t_net_stage * (work.bwd_flop_mult * work.bwd_comm_mult)
+    t_bwd = max(t_bwd_comp, t_bwd_net, t_p2p)
+    t_pipe = (n_micro + pp - 1) * (t_fwd + t_bwd)
+    bubble = (pp - 1) * (t_fwd + t_bwd)
+
+    # DP gradient all-reduce on the per-chip weight shard, overlapped with bwd
+    w_chip = work.total_weight_bytes() / (tp * pp)
+    t_dp = dp_topo.all_reduce(w_chip, list(range(len(dp_topo.dims)))) if dp > 1 else 0.0
+    exposed_dp = max(0.0, t_dp - n_micro * t_bwd_comp * 0.5)
+    iter_time = t_pipe + exposed_dp
+
+    model_flops = (work.total_fwd_flops_per_seq()
+                   * (1.0 + work.bwd_flop_mult) * work.global_batch)
+    util = model_flops / (iter_time * system.n_chips * peak)
+
+    # --- per-chip memory -----------------------------------------------------
+    w_bytes = work.total_weight_bytes() / (tp * pp)
+    opt_bytes = w_bytes * work.optimizer_bytes_per_param_byte
+    act_per_layer = sum(t.bytes_ for t in work.layer_graph.tensors) / tp
+    layers_per_stage = math.ceil(work.n_layers / pp)
+    act_bytes = act_per_layer * layers_per_stage * min(n_micro, pp)
+    mem = w_bytes + opt_bytes + act_bytes
+    feasible = mem <= system.memory.capacity
+
+    return InterChipPlan(
+        tp=tp, pp=pp, dp=dp, sharding=shard, stage_bounds=bounds,
+        t_stage_fwd=t_fwd, t_comp_stage=t_comp_stage, t_net_stage=t_net_stage,
+        t_p2p_stage=t_p2p, n_micro=n_micro, iter_time=iter_time,
+        breakdown={
+            "fwd": n_micro * t_comp_stage,
+            "bwd": n_micro * t_bwd_comp,
+            "bubble": bubble,
+            "tp_comm": n_micro * (t_net_stage + t_bwd_net),
+            "pp_comm": n_micro * t_p2p,
+            "dp_comm": t_dp,
+            "dp_exposed": exposed_dp,
+        },
+        utilization=util, per_chip_mem_bytes=mem, feasible=feasible,
+        tp_topology=tp_topo, dp_topology=dp_topo)
+
+
+def optimize_inter_chip(work: TrainWorkload, system: SystemSpec,
+                        max_tp: int | None = None,
+                        max_pp: int | None = None,
+                        allow_subdivision: bool = True,
+                        fixed: tuple[int, int, int] | None = None,
+                        execution: str = "dataflow") -> InterChipPlan:
+    """Search the (TP, PP, DP) × dim-assignment space; return the best
+    *feasible* plan by iteration time (ties → higher utilization)."""
+    n_chips = system.n_chips
+    combos = ([fixed] if fixed is not None
+              else enumerate_parallelism(n_chips, max_tp, max_pp))
+    best: InterChipPlan | None = None
+    for tp, pp, dp in combos:
+        if pp > work.n_layers + 2:
+            continue
+        for tp_topo, pp_topo, dp_topo in _subdivide_dims(
+                system.topology, (tp, pp, dp), allow_subdivision):
+            plan = evaluate_plan(work, system, tp, pp, dp,
+                                 tp_topo, pp_topo, dp_topo, execution)
+            if plan is None:
+                continue
+            if best is None:
+                best = plan
+                continue
+            key = (not plan.feasible, plan.iter_time)
+            bkey = (not best.feasible, best.iter_time)
+            if key < bkey:
+                best = plan
+    if best is None:
+        raise ValueError(f"no (tp,pp,dp) decomposition of {n_chips} chips fits "
+                         f"{work.name}")
+    return best

@@ -1,0 +1,22 @@
+"""Pallas TPU kernels for the compute hot-spots DFModel's intra-chip pass
+fuses (DESIGN.md §3): each fused dataflow partition that the optimizer emits
+maps to one of these kernels on TPU.
+
+  flash_attention  — the canonical fused {MHA1, Softmax, MHA2} partition
+                     (paper Fig 2C / §VII.B partition 2). Causal, GQA.
+  decode_attention — split-KV fused decode attention with exported LSE for
+                     cross-chip context-parallel combine.
+  ssd              — Mamba2 SSD intra-chunk kernel (scores·decay·values + chunk
+                     state), the hot loop of the hybrid/ssm architectures.
+  rmsnorm          — fused RMSNorm (+ optional residual add).
+
+Every kernel ships ``ops.py`` (jit'd public wrapper with interpret fallback)
+and ``ref.py`` (pure-jnp oracle used by the allclose sweeps in tests/).
+"""
+from .flash_attention.ops import flash_attention
+from .decode_attention.ops import decode_attention
+from .ssd.ops import ssd_chunk
+from .rmsnorm.ops import fused_rmsnorm
+
+__all__ = ["flash_attention", "decode_attention", "ssd_chunk",
+           "fused_rmsnorm"]

@@ -1,0 +1,24 @@
+"""Public jit'd wrapper for split-KV decode attention."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import decode_attention_fwd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_k", "return_lse", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kv_len, block_k: int = 256, return_lse: bool = True,
+                     interpret: bool | None = None):
+    """q: (B, H, hd); k, v: (B, Hkv, S, hd). Returns o [, lse]."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    o, lse = decode_attention_fwd(q, k, v, kv_len, block_k=block_k,
+                                  interpret=interpret)
+    return (o, lse) if return_lse else o

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for split-KV decode attention (with LSE export)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         kv_len: jax.Array | int,
+                         return_lse: bool = False):
+    """q: (B, H, hd); k, v: (B, Hkv, S, hd); kv_len: valid prefix length.
+
+    Returns o (B, H, hd) [, lse (B, H)] — the un-normalized form
+    (o·softmax denominators applied), fp32 math.
+    """
+    b, h, hd = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    n_rep = h // hkv
+    k = jnp.repeat(k, n_rep, axis=1)
+    v = jnp.repeat(v, n_rep, axis=1)
+    logits = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    mask = jnp.arange(s)[None, None, :] < kv_len
+    logits = jnp.where(mask, logits, -jnp.inf)
+    m = logits.max(axis=-1)
+    p = jnp.exp(logits - m[..., None])
+    l = p.sum(axis=-1)
+    o = jnp.einsum("bhk,bhkd->bhd", p, v.astype(jnp.float32)) / l[..., None]
+    if return_lse:
+        return o.astype(q.dtype), (m + jnp.log(l)).astype(jnp.float32)
+    return o.astype(q.dtype)

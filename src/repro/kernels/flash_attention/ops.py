@@ -1,0 +1,68 @@
+"""Public jit'd wrapper for the flash-attention kernel.
+
+On CPU (this container) the kernel runs in ``interpret=True`` mode for
+validation; on TPU it lowers to Mosaic. ``flash_attention`` is the drop-in
+replacement for the {MHA1, Softmax, MHA2} fused partition.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import flash_attention_fwd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
+    """q: (B, H, Sq, hd); k, v: (B, Hkv, Sk, hd) -> (B, H, Sq, hd)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return flash_attention_fwd(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+
+
+# ---------------------- differentiable (training) path -----------------------
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention_train(q, k, v, causal: bool = True, block_q: int = 128,
+                          block_k: int = 128, interpret: bool | None = None):
+    """flash_attention with a Pallas backward (FlashAttention-2): the
+    (Sq, Sk) probability matrix never exists in HBM in either direction."""
+    from .backward import flash_attention_fwd_lse
+    if interpret is None:
+        interpret = not _on_tpu()
+    o, _ = flash_attention_fwd_lse(q, k, v, causal=causal, block_q=block_q,
+                                   block_k=block_k, interpret=interpret)
+    return o
+
+
+def _fa_train_fwd(q, k, v, causal, block_q, block_k, interpret):
+    from .backward import flash_attention_fwd_lse
+    if interpret is None:
+        interpret = not _on_tpu()
+    o, lse = flash_attention_fwd_lse(q, k, v, causal=causal,
+                                     block_q=block_q, block_k=block_k,
+                                     interpret=interpret)
+    return o, (q, k, v, o, lse)
+
+
+def _fa_train_bwd(causal, block_q, block_k, interpret, res, do):
+    from .backward import flash_attention_bwd
+    if interpret is None:
+        interpret = not _on_tpu()
+    q, k, v, o, lse = res
+    dq, dk, dv = flash_attention_bwd(q, k, v, o, lse, do, causal=causal,
+                                     block_q=block_q, block_k=block_k,
+                                     interpret=interpret)
+    return dq, dk, dv
+
+
+flash_attention_train.defvjp(_fa_train_fwd, _fa_train_bwd)

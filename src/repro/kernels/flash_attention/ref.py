@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the flash-attention kernel (GQA, causal/bidir)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True) -> jax.Array:
+    """q: (B, H, Sq, hd); k, v: (B, Hkv, Sk, hd). fp32 math."""
+    b, h, sq, hd = q.shape
+    hkv = k.shape[1]
+    n_rep = h // hkv
+    k = jnp.repeat(k, n_rep, axis=1)
+    v = jnp.repeat(v, n_rep, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    if causal:
+        qi = jnp.arange(sq)[:, None]
+        ki = jnp.arange(k.shape[2])[None, :]
+        logits = jnp.where(ki <= qi, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,3 @@
+from .ops import fused_rmsnorm
+
+__all__ = ["fused_rmsnorm"]

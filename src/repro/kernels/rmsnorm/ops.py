@@ -1,0 +1,22 @@
+"""Public jit'd wrapper for fused residual-add + RMSNorm."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import fused_rmsnorm_fwd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def fused_rmsnorm(x: jax.Array, w: jax.Array,
+                  residual: jax.Array | None = None, eps: float = 1e-6,
+                  block_rows: int = 256, interpret: bool | None = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return fused_rmsnorm_fwd(x, w, residual, eps=eps,
+                             block_rows=block_rows, interpret=interpret)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for fused residual-add + RMSNorm."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_rmsnorm_ref(x: jax.Array, w: jax.Array,
+                      residual: jax.Array | None = None,
+                      eps: float = 1e-6):
+    """x: (T, d). Returns (normed, new_residual). fp32 accumulation."""
+    xf = x.astype(jnp.float32)
+    if residual is not None:
+        xf = xf + residual.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+    return y.astype(x.dtype), xf.astype(x.dtype)

@@ -1,0 +1,3 @@
+from .ops import ssd_chunk
+
+__all__ = ["ssd_chunk"]

@@ -1,0 +1,22 @@
+"""Public jit'd wrapper for the SSD chunk-scan kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import ssd_chunk_fwd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunk(x: jax.Array, dt: jax.Array, B: jax.Array, C: jax.Array,
+              dA: jax.Array, chunk: int = 128,
+              interpret: bool | None = None):
+    """x: (BH, S, P); dt/dA: (BH, S); B/C: (BH, S, N) -> (y, h_final)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return ssd_chunk_fwd(x, dt, B, C, dA, chunk=chunk, interpret=interpret)

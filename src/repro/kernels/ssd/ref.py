@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel (Mamba2, arXiv:2405.21060).
+
+Per (batch·head, chunk): given the chunk's inputs it computes
+  y_intra = (C Bᵀ ⊙ L) (x·dt)      — the "attention-like" dual form
+  state   = Σ_j exp(csum_Q - csum_j) B_j (x_j dt_j)   — the chunk state
+  y_inter = C h_in · exp(csum)     — contribution of the incoming state
+where L[i,j] = exp(csum_i − csum_j) for i ≥ j. The inter-chunk recurrence
+over chunk states stays outside the kernel (tiny, sequential).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(x: jax.Array, dt: jax.Array, B: jax.Array, C: jax.Array,
+                  dA: jax.Array, h_in: jax.Array):
+    """Single chunk, single (batch·head):
+    x (Q, P), dt (Q,), B (Q, N), C (Q, N), dA (Q,), h_in (N, P).
+    Returns (y (Q, P), h_out (N, P)). fp32 math.
+    """
+    q = x.shape[0]
+    csum = jnp.cumsum(dA)                                  # (Q,)
+    diff = csum[:, None] - csum[None, :]                   # (Q, Q)
+    L = jnp.where(jnp.tril(jnp.ones((q, q), bool)), jnp.exp(diff), 0.0)
+    xdt = x * dt[:, None]                                  # (Q, P)
+    scores = (C @ B.T) * L                                 # (Q, Q)
+    y_intra = scores @ xdt
+    decay_in = jnp.exp(csum)[:, None]                      # (Q, 1)
+    y_inter = (C @ h_in) * decay_in
+    decay_out = jnp.exp(csum[-1] - csum)[:, None]          # (Q, 1)
+    h_out = h_in * jnp.exp(csum[-1]) + B.T @ (xdt * decay_out)
+    return y_intra + y_inter, h_out

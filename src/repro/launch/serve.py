@@ -1,0 +1,48 @@
+"""Serving launcher: mesh + cache shardings + batched generation.
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \\
+      python -m repro.launch.serve --arch olmo_1b --smoke --requests 4
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from ..configs import ARCH_IDS, get_config
+from ..models import init_params
+from ..parallel.logical import use_rules
+from ..serve.engine import ServeEngine
+from .mesh import make_axis_rules
+from .train import parse_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="olmo_1b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--mesh")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    mesh = parse_mesh(args.mesh)
+    rules = make_axis_rules(mesh, cfg)
+    with mesh, use_rules(rules, mesh):
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        engine = ServeEngine(cfg, params, max_batch=args.requests,
+                             max_len=args.prompt_len + args.tokens + 1)
+        prompts = jax.random.randint(
+            jax.random.PRNGKey(1), (args.requests, args.prompt_len),
+            0, cfg.vocab)
+        res = engine.generate(prompts, n_tokens=args.tokens)
+    print(f"{cfg.name} on mesh "
+          f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
+    print(f"TTFT {res.ttft * 1e3:.1f} ms  TPOT {res.tpot * 1e3:.2f} ms "
+          f" throughput {res.tokens_per_s:.1f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""Sharding assembly: params / optimizer / batch / cache PartitionSpecs for
+a given (config, mesh). Used by the dry-run, the trainer and the server.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models import init_params, init_cache
+from ..models.config import ModelConfig
+from ..parallel.logical import AxisRules, param_spec
+from .mesh import batch_axes, make_axis_rules, safe_spec
+
+
+def _path_strs(path) -> list[str]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return out
+
+
+def _fsdp_spec(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """ZeRO/FSDP: additionally shard each parameter over the data axes.
+
+    Picks the largest dim not already sharded whose size divides the data
+    axis product; params/optimizer state then live fully sharded and GSPMD
+    inserts the all-gather (fwd/bwd) + reduce-scatter (grads) — the ZeRO-3
+    schedule. Leaves too small to split stay replicated.
+    """
+    ba = batch_axes(mesh)
+    axes = ba if isinstance(ba, tuple) else (ba,)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    fsdp_size = 1
+    for a in axes:
+        fsdp_size *= sizes[a]
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    cands = [i for i, (dim, ax) in enumerate(zip(shape, entries))
+             if ax is None and dim % fsdp_size == 0]
+    if not cands:
+        return spec
+    best = max(cands, key=lambda i: shape[i])
+    entries[best] = ba
+    return P(*entries)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, fsdp: bool = False):
+    """Pytree of NamedShardings matching init_params(cfg, key)."""
+    rules = make_axis_rules(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    shapes = jax.eval_shape(
+        lambda k: init_params(cfg, k),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+    def one(path, leaf):
+        parts = _path_strs(path)
+        if parts[0] in ("stack", "enc_stack"):
+            parts = ["stack"] + parts[1:]
+        spec = param_spec(parts, leaf.shape, rules, sizes)
+        if fsdp:
+            spec = _fsdp_spec(spec, leaf.shape, mesh)
+        return NamedSharding(mesh, safe_spec(leaf.shape, spec, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, shapes)
+
+
+def opt_shardings(cfg: ModelConfig, mesh: Mesh, fsdp: bool = False,
+                  master: bool = False):
+    ps = param_shardings(cfg, mesh, fsdp=fsdp)
+    out = {"m": ps, "v": ps,
+           "step": NamedSharding(mesh, P())}
+    if master:   # mixed precision: fp32 master weights, sharded like params
+        out["master"] = ps
+    return out
+
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, batch: int):
+    ba = batch_axes(mesh)
+    bspec = safe_spec((batch, 1), P(ba, None), mesh)
+    out = {"tokens": NamedSharding(mesh, bspec),
+           "labels": NamedSharding(mesh, bspec)}
+    if cfg.family == "vlm":
+        out["image_embeds"] = NamedSharding(
+            mesh, safe_spec((batch, 1, 1), P(ba, None, None), mesh))
+    if cfg.is_enc_dec:
+        out["audio_frames"] = NamedSharding(
+            mesh, safe_spec((batch, 1, 1), P(ba, None, None), mesh))
+    return out
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int):
+    """Decode cache: KV sequence dim on 'model' (context parallelism),
+    batch on the data axes; SSM state heads on 'model'."""
+    ba = batch_axes(mesh)
+    shapes = jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+    specs = {}
+    if "k" in shapes:
+        s = shapes["k"].shape
+        spec = safe_spec(s, P(None, None, ba, "model", None, None), mesh)
+        specs["k"] = NamedSharding(mesh, spec)
+        specs["v"] = NamedSharding(mesh, spec)
+    if "ssm" in shapes:
+        s = shapes["ssm"].shape
+        specs["ssm"] = NamedSharding(
+            mesh, safe_spec(s, P(None, None, ba, "model", None, None), mesh))
+        c = shapes["conv"].shape
+        specs["conv"] = NamedSharding(
+            mesh, safe_spec(c, P(None, None, ba, None, "model"), mesh))
+    return specs
+
+
+def decode_input_shardings(cfg: ModelConfig, mesh: Mesh, batch: int,
+                           max_len: int):
+    ba = batch_axes(mesh)
+    out = {
+        "token": NamedSharding(mesh, safe_spec((batch,), P(ba), mesh)),
+        "pos": NamedSharding(mesh, P()),
+        "cache": cache_shardings(cfg, mesh, batch, max_len),
+    }
+    if cfg.family == "vlm" or cfg.is_enc_dec:
+        out["memory"] = NamedSharding(
+            mesh, safe_spec((batch, 1, 1), P(ba, None, None), mesh))
+    return out

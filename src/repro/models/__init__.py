@@ -1,0 +1,10 @@
+from .config import ModelConfig
+from .inputs import decode_specs, input_specs, synth_batch, train_batch_specs
+from .transformer import (decode_step, encode, forward, init_cache,
+                          init_params, loss_fn, param_count, prefill)
+
+__all__ = [
+    "ModelConfig", "decode_specs", "input_specs", "synth_batch",
+    "train_batch_specs", "decode_step", "encode", "forward", "init_cache",
+    "init_params", "loss_fn", "param_count", "prefill",
+]

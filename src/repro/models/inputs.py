@@ -1,0 +1,79 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape) cell.
+
+``input_specs`` returns exactly the pytrees the step functions consume — no
+device allocation (dry-run pattern). Modality frontends are stubs: VLM cells
+get precomputed patch embeddings, audio cells get precomputed frame
+embeddings (per the assignment brief).
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+if TYPE_CHECKING:  # avoid circular import (configs -> models -> inputs)
+    from ..configs import ShapeSpec
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_batch_specs(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    specs = {
+        "tokens": SDS((batch, seq), jnp.int32),
+        "labels": SDS((batch, seq), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        specs["image_embeds"] = SDS((batch, cfg.n_image_tokens, cfg.d_model),
+                                    jnp.bfloat16)
+    if cfg.is_enc_dec:
+        specs["audio_frames"] = SDS((batch, cfg.n_audio_frames, cfg.d_model),
+                                    jnp.bfloat16)
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, batch: int, kv_len: int) -> dict:
+    """Inputs of serve_step: one new token + the cache pytree."""
+    from .transformer import init_cache
+    cache = jax.eval_shape(lambda: init_cache(cfg, batch, kv_len))
+    specs = {
+        "token": SDS((batch,), jnp.int32),
+        "pos": SDS((), jnp.int32),
+        "cache": cache,
+    }
+    if cfg.family == "vlm":
+        specs["memory"] = SDS((batch, cfg.n_image_tokens, cfg.d_model),
+                              jnp.bfloat16)
+    if cfg.is_enc_dec:
+        specs["memory"] = SDS((batch, cfg.n_audio_frames, cfg.d_model),
+                              jnp.bfloat16)
+    return specs
+
+
+def input_specs(cfg: ModelConfig, shape: "ShapeSpec") -> dict:
+    if shape.phase == "train":
+        return train_batch_specs(cfg, shape.global_batch, shape.seq_len)
+    if shape.phase == "prefill":
+        specs = train_batch_specs(cfg, shape.global_batch, shape.seq_len)
+        specs.pop("labels")
+        return specs
+    return decode_specs(cfg, shape.global_batch, shape.seq_len)
+
+
+def synth_batch(cfg: ModelConfig, batch: int, seq: int, seed: int = 0) -> dict:
+    """Materialized synthetic batch (for smoke tests / examples)."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    out = {
+        "tokens": jax.random.randint(k1, (batch, seq), 0, cfg.vocab),
+        "labels": jax.random.randint(k2, (batch, seq), 0, cfg.vocab),
+    }
+    if cfg.family == "vlm":
+        out["image_embeds"] = jax.random.normal(
+            k3, (batch, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.is_enc_dec:
+        out["audio_frames"] = jax.random.normal(
+            k3, (batch, cfg.n_audio_frames, cfg.d_model), jnp.bfloat16)
+    return out

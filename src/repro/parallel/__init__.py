@@ -1,0 +1,3 @@
+from .logical import AxisRules, shard, use_rules, current_rules, param_spec
+
+__all__ = ["AxisRules", "shard", "use_rules", "current_rules", "param_spec"]

@@ -1,0 +1,125 @@
+"""Logical-axis sharding annotations (MaxText-style, minimal).
+
+Models annotate activations with *logical* axis names; the launcher installs
+an ``AxisRules`` mapping logical names → mesh axes. Outside any rules context
+(unit tests, single device) the annotations are no-ops, so model code is
+mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """logical axis -> mesh axis (or tuple of mesh axes, or None)."""
+
+    rules: dict
+
+    def spec(self, *logical: str | None) -> P:
+        return P(*(self.rules.get(a) if a is not None else None
+                   for a in logical))
+
+
+_current: contextvars.ContextVar[AxisRules | None] = contextvars.ContextVar(
+    "axis_rules", default=None)
+_current_mesh: contextvars.ContextVar = contextvars.ContextVar(
+    "axis_mesh", default=None)
+
+
+def current_rules() -> AxisRules | None:
+    return _current.get()
+
+
+def current_mesh():
+    """The mesh installed alongside the rules (None outside the launcher).
+    Layers use it to opt into hand-written shard_map collectives (e.g. the
+    expert-parallel MoE dispatch) instead of GSPMD auto-partitioning."""
+    return _current_mesh.get()
+
+
+@contextlib.contextmanager
+def use_rules(rules: AxisRules | None, mesh=None):
+    token = _current.set(rules)
+    mtoken = _current_mesh.set(mesh)
+    try:
+        yield
+    finally:
+        _current.reset(token)
+        _current_mesh.reset(mtoken)
+
+
+def shard(x: jax.Array, *logical: str | None) -> jax.Array:
+    """Annotate ``x`` with the mesh sharding implied by logical axis names.
+
+    No-op when no rules are installed. Logical names not present in the
+    rules map to replicated dims.
+    """
+    rules = _current.get()
+    if rules is None:
+        return x
+    if len(logical) != x.ndim:
+        raise ValueError(f"shard(): {len(logical)} axes for rank-{x.ndim}")
+    return jax.lax.with_sharding_constraint(x, rules.spec(*logical))
+
+
+def param_spec(path: Sequence[str], shape: tuple[int, ...],
+               rules: AxisRules, mesh_axis_sizes: dict) -> P:
+    """PartitionSpec for a parameter leaf by naming convention.
+
+    Conventions (leaf name — see models/layers.py init functions):
+      embed (V, d)        -> ('vocab', None)
+      wq/wk/wv (d, H*hd)  -> (None, 'heads')   [kv replicated if indivisible]
+      wo (H*hd, d)        -> ('heads', None)
+      mlp wi/wg (d, F)    -> (None, 'ff'); wo (F, d) -> ('ff', None)
+      moe wi/wg (E, d, F) -> ('experts', None, None); router replicated
+      ssm in_proj (d, X)  -> (None, 'ff'); out_proj (X, d) -> ('ff', None)
+      norms / scalars     -> replicated
+    Stacked-layer leaves carry a leading (n_blocks,) dim -> None prepended.
+    """
+    name = path[-1]
+    stacked = len(path) > 1 and path[0] == "stack"
+
+    def ok(logical: str, dim: int) -> bool:
+        ax = rules.rules.get(logical)
+        if ax is None:
+            return False
+        size = mesh_axis_sizes.get(ax, 1) if isinstance(ax, str) else 1
+        if isinstance(ax, tuple):
+            size = 1
+            for a in ax:
+                size *= mesh_axis_sizes.get(a, 1)
+        return dim % max(size, 1) == 0
+
+    base: tuple = ()
+    d = shape[1:] if stacked else shape
+    if name == "embed":
+        base = (rules.rules.get("vocab") if ok("vocab", d[0]) else None, None)
+    elif name in ("wq",):
+        base = (None, rules.rules.get("heads") if ok("heads", d[1]) else None)
+    elif name in ("wk", "wv"):
+        base = (None, rules.rules.get("kv_heads") if ok("kv_heads", d[1]) else None)
+    elif name == "wo" and len(d) == 2:
+        base = (rules.rules.get("heads") if ok("heads", d[0]) else None, None)
+    elif name in ("wi", "wg") and len(d) == 2:
+        base = (None, rules.rules.get("ff") if ok("ff", d[1]) else None)
+    elif name in ("wi", "wg", "wo", "router") and len(d) == 3:
+        base = (rules.rules.get("experts") if ok("experts", d[0]) else None,
+                None, None)
+    elif name == "in_proj":
+        base = (None, rules.rules.get("ff") if ok("ff", d[1]) else None)
+    elif name == "out_proj":
+        base = (rules.rules.get("ff") if ok("ff", d[0]) else None, None)
+    elif name == "lm_head":
+        base = (None, rules.rules.get("vocab") if ok("vocab", d[1]) else None)
+    else:
+        base = tuple(None for _ in d)
+    if stacked:
+        base = (None,) + base
+    return P(*base)

@@ -1,0 +1,4 @@
+from .engine import ServeEngine, GenerationResult
+from .specdecode import speculative_generate
+
+__all__ = ["ServeEngine", "GenerationResult", "speculative_generate"]

@@ -1,0 +1,82 @@
+"""Batched serving engine: prefill + decode with a slot-based KV cache
+(continuous-batching-lite: fixed slots, per-slot position counters, greedy or
+temperature sampling). This is the executable twin of the paper's §VIII.A
+serving model — TTFT = prefill latency, TPOT = decode step latency.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..models import decode_step, init_cache, prefill
+from ..models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: list
+    ttft: float
+    tpot: float
+    tokens_per_s: float
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, max_batch: int = 8,
+                 max_len: int = 1024):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self._decode = jax.jit(
+            lambda p, c, t, pos, mem: decode_step(cfg, p, c, t, pos,
+                                                  memory=mem))
+        self._prefill = jax.jit(
+            lambda p, t, mem: prefill(cfg, p, t, memory=mem))
+
+    def generate(self, prompts: jax.Array, n_tokens: int,
+                 memory: jax.Array | None = None,
+                 temperature: float = 0.0,
+                 rng: jax.Array | None = None) -> GenerationResult:
+        """prompts: (B, S) int32 (same length; pad upstream)."""
+        b, s = prompts.shape
+        assert s + n_tokens <= self.max_len
+        t0 = time.perf_counter()
+        logits, cache0 = self._prefill(self.params, prompts, memory)
+        # re-home the prefill cache into the serving-length cache
+        cache = init_cache(self.cfg, b, self.max_len)
+        if "k" in cache0:
+            cache["k"] = cache["k"].at[:, :, :, :s].set(cache0["k"])
+            cache["v"] = cache["v"].at[:, :, :, :s].set(cache0["v"])
+        if "ssm" in cache0:
+            cache["ssm"] = cache0["ssm"]
+            cache["conv"] = cache0["conv"]
+        next_tok = self._sample(logits[:, -1], temperature, rng)
+        jax.block_until_ready(next_tok)
+        ttft = time.perf_counter() - t0
+
+        toks = [next_tok]
+        t1 = time.perf_counter()
+        pos = s
+        for i in range(n_tokens - 1):
+            logits_i, cache = self._decode(self.params, cache, toks[-1],
+                                           jnp.int32(pos), memory)
+            toks.append(self._sample(logits_i, temperature, rng))
+            pos += 1
+        jax.block_until_ready(toks[-1])
+        dt = time.perf_counter() - t1
+        tpot = dt / max(n_tokens - 1, 1)
+        return GenerationResult(
+            tokens=[t.tolist() for t in toks], ttft=ttft, tpot=tpot,
+            tokens_per_s=b * n_tokens / (ttft + dt))
+
+    @staticmethod
+    def _sample(logits: jax.Array, temperature: float,
+                rng: jax.Array | None):
+        if temperature <= 0.0 or rng is None:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(rng, logits / temperature
+                                      ).astype(jnp.int32)

@@ -1,0 +1,12 @@
+from .optimizer import adamw_init, adamw_update, cosine_schedule
+from .trainer import TrainState, make_train_step, train_loop
+from .checkpoint import CheckpointManager
+from .data import SyntheticTokens, MemmapTokens
+from .fault import StragglerMonitor, retry_step
+
+__all__ = [
+    "adamw_init", "adamw_update", "cosine_schedule",
+    "TrainState", "make_train_step", "train_loop",
+    "CheckpointManager", "SyntheticTokens", "MemmapTokens",
+    "StragglerMonitor", "retry_step",
+]

@@ -1,0 +1,74 @@
+"""Token data pipeline: synthetic stream (benchmark/dry-run) and a
+memmap-backed shard reader (the production path: fixed-length token files,
+per-host sharding by data-parallel rank, deterministic resume).
+"""
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class SyntheticTokens:
+    """Deterministic synthetic token batches (model-free throughput tests)."""
+
+    vocab: int
+    batch: int
+    seq: int
+    seed: int = 0
+    extras: dict | None = None   # e.g. image_embeds spec for VLM
+
+    def __iter__(self):
+        rng = np.random.default_rng(self.seed)
+        while True:
+            toks = rng.integers(0, self.vocab,
+                                (self.batch, self.seq + 1), dtype=np.int32)
+            out = {"tokens": jnp.asarray(toks[:, :-1]),
+                   "labels": jnp.asarray(toks[:, 1:])}
+            if self.extras:
+                for k, shape in self.extras.items():
+                    out[k] = jnp.asarray(
+                        rng.standard_normal((self.batch, *shape),
+                                            dtype=np.float32),
+                        dtype=jnp.bfloat16)
+            yield out
+
+
+class MemmapTokens:
+    """Reads token shards written as flat .bin int32 files.
+
+    Supports data-parallel sharding (rank/world) and exact resume via a step
+    cursor — the two properties a restartable multi-pod job needs.
+    """
+
+    def __init__(self, path: str | pathlib.Path, batch: int, seq: int,
+                 rank: int = 0, world: int = 1, start_step: int = 0):
+        self.tokens = np.memmap(path, dtype=np.int32, mode="r")
+        self.batch, self.seq = batch, seq
+        self.rank, self.world = rank, world
+        self.step = start_step
+        self.tokens_per_step = batch * (seq + 1) * world
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        need = self.batch * (self.seq + 1)
+        base = (self.step * self.tokens_per_step + self.rank * need)
+        base = base % max(len(self.tokens) - need, 1)
+        chunk = np.asarray(self.tokens[base:base + need]).reshape(
+            self.batch, self.seq + 1)
+        self.step += 1
+        return {"tokens": jnp.asarray(chunk[:, :-1]),
+                "labels": jnp.asarray(chunk[:, 1:])}
+
+    @staticmethod
+    def write_corpus(path, n_tokens: int, vocab: int, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        arr = rng.integers(0, vocab, n_tokens, dtype=np.int32)
+        arr.tofile(path)
+        return path

@@ -1,0 +1,88 @@
+"""AdamW + schedules, pure-pytree implementation (no optax dependency)."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def adamw_init(params, master: bool = False):
+    """``master=True`` enables mixed precision: moments and a master copy of
+    the weights are kept in fp32 while the live params stay in their compute
+    dtype (bf16) — halves weight-gather / grad-reduce traffic at equal
+    convergence (§Perf hillclimb, EXPERIMENTS.md)."""
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    out = {
+        "m": jax.tree.map(f32 if master else jnp.zeros_like, params),
+        "v": jax.tree.map(f32 if master else jnp.zeros_like, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if master:
+        out["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.float32), params)
+    return out
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig,
+                 lr_scale: jax.Array | float = 1.0):
+    """One AdamW step with global-norm clipping. Returns (params, state).
+
+    If ``state`` carries a fp32 ``master`` tree (mixed precision), the update
+    is applied to the master weights and the live params are re-cast from it.
+    """
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    gf = jax.tree.map(lambda g: g.astype(jnp.float32) * clip, grads)
+    m = jax.tree.map(lambda mu, g: cfg.b1 * mu + (1 - cfg.b1) * g,
+                     state["m"], gf)
+    v = jax.tree.map(lambda nu, g: cfg.b2 * nu + (1 - cfg.b2) * g * g,
+                     state["v"], gf)
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, mu, nu):
+        mhat = mu / bc1
+        vhat = nu / bc2
+        return p - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                         + cfg.weight_decay * p)
+
+    if "master" in state:
+        master = jax.tree.map(upd, state["master"], m, v)
+        params = jax.tree.map(lambda mp, p: mp.astype(p.dtype),
+                              master, params)
+        return params, {"m": m, "v": v, "master": master, "step": step}
+    params = jax.tree.map(
+        lambda p, mu, nu: upd(p.astype(jnp.float32), mu, nu).astype(p.dtype),
+        params, m, v)
+    return params, {"m": m, "v": v, "step": step}
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int
+                    ) -> Callable[[jax.Array], jax.Array]:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(math.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return fn

@@ -1,0 +1,64 @@
+"""Shared fixtures + hypothesis strategies.
+
+IMPORTANT: no XLA_FLAGS here — smoke tests and benches must see the real
+single CPU device; only launch/dryrun.py installs the 512 placeholder
+devices (and only in its own process).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import strategies as st
+
+from repro.core.graph import DataflowGraph, Kernel, KernelKind, Tensor
+
+
+# --------------------------- random DAG strategy ------------------------------
+@st.composite
+def dags(draw, max_kernels: int = 8, max_edges: int = 12,
+         connected_chain: bool = True):
+    """Random DAG with kernels k0..k{n-1}; edges only i -> j with i < j, so
+    the index order is a valid topological order."""
+    n = draw(st.integers(min_value=2, max_value=max_kernels))
+    kinds = list(KernelKind)
+    kernels = [
+        Kernel(f"k{i}",
+               flops=draw(st.floats(min_value=1.0, max_value=1e12)),
+               kind=draw(st.sampled_from(kinds)),
+               weight_bytes=draw(st.floats(min_value=0.0, max_value=1e9)))
+        for i in range(n)
+    ]
+    edges: set[tuple[int, int]] = set()
+    if connected_chain:
+        edges |= {(i, i + 1) for i in range(n - 1)}
+    m_extra = draw(st.integers(min_value=0, max_value=max_edges))
+    for _ in range(m_extra):
+        i = draw(st.integers(min_value=0, max_value=n - 2))
+        j = draw(st.integers(min_value=i + 1, max_value=n - 1))
+        edges.add((i, j))
+    tensors = [
+        Tensor(f"t{i}_{j}", f"k{i}", f"k{j}",
+               draw(st.floats(min_value=1.0, max_value=1e9)))
+        for (i, j) in sorted(edges)
+    ]
+    return DataflowGraph(kernels, tensors, "random")
+
+
+@st.composite
+def dags_with_assignments(draw, max_kernels: int = 8, p_max: int = 4):
+    """(graph, precedence-feasible assignment vector, p_max)."""
+    g = draw(dags(max_kernels=max_kernels))
+    # monotone assignment along index order keeps precedence feasible
+    assign = []
+    cur = 0
+    for _ in range(g.n):
+        cur = min(cur + draw(st.integers(min_value=0, max_value=1)),
+                  p_max - 1)
+        assign.append(cur)
+    return g, np.array(assign, dtype=np.int64), p_max
+
+
+@pytest.fixture(scope="session")
+def smoke_cfgs():
+    from repro.configs import ARCH_IDS, get_config
+    return {a: get_config(a, smoke=True) for a in ARCH_IDS}

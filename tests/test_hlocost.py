@@ -1,0 +1,164 @@
+"""Trip-count-aware HLO cost model tests (launch/hlocost.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import hlocost
+
+
+def _compile(fn, *specs):
+    return jax.jit(fn).lower(*specs).compile().as_text()
+
+
+def test_matmul_flops_exact():
+    txt = _compile(lambda a, b: a @ b,
+                   jax.ShapeDtypeStruct((256, 512), jnp.float32),
+                   jax.ShapeDtypeStruct((512, 128), jnp.float32))
+    s = hlocost.analyze(txt)
+    assert s.flops == pytest.approx(2 * 256 * 512 * 128, rel=0.01)
+
+
+def test_batched_dot_flops():
+    txt = _compile(lambda a, b: jnp.einsum("bij,bjk->bik", a, b),
+                   jax.ShapeDtypeStruct((4, 64, 96), jnp.float32),
+                   jax.ShapeDtypeStruct((4, 96, 32), jnp.float32))
+    s = hlocost.analyze(txt)
+    assert s.flops == pytest.approx(2 * 4 * 64 * 96 * 32, rel=0.01)
+
+
+def test_scan_trip_count_scaling():
+    """FLOPs must scale with the scan length — the exact failure mode of
+    XLA's built-in cost_analysis this module exists to fix."""
+    def make(n):
+        w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+        x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+
+        def fn(w, x):
+            def body(c, _):
+                return jnp.tanh(c @ w), None
+            out, _ = jax.lax.scan(body, x, None, length=n)
+            return out
+        return hlocost.analyze(_compile(fn, w, x))
+
+    s4, s16 = make(4), make(16)
+    assert s16.while_trip_counts and 16 in s16.while_trip_counts
+    ratio = s16.flops / s4.flops
+    assert 3.0 < ratio < 5.0, ratio     # 16/4 = 4× the loop body
+
+
+def test_nested_scan_multiplies():
+    def fn(x):
+        def outer(c, _):
+            def inner(ci, _):
+                return jnp.tanh(ci @ ci), None
+            ci, _ = jax.lax.scan(inner, c, None, length=3)
+            return ci, None
+        out, _ = jax.lax.scan(outer, x, None, length=5)
+        return out
+
+    s = hlocost.analyze(_compile(
+        fn, jax.ShapeDtypeStruct((32, 32), jnp.float32)))
+    # 15 total inner matmuls
+    assert s.flops == pytest.approx(15 * 2 * 32 * 32 * 32, rel=0.15)
+
+
+def test_bytes_accessed_nonzero_and_sane():
+    txt = _compile(lambda a: a + 1.0,
+                   jax.ShapeDtypeStruct((1024, 1024), jnp.float32))
+    s = hlocost.analyze(txt)
+    nbytes = 1024 * 1024 * 4
+    assert nbytes <= s.bytes_accessed <= 4 * nbytes
+
+
+def test_collective_parsing_list_format():
+    hlo = """
+HloModule test, entry_computation_layout={()->f32[64]{0}}
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+ENTRY %main () -> f32[64] {
+  %c = f32[64]{0} constant({...})
+  ROOT %ar = f32[64]{0} all-reduce(%c), replica_groups={{0,1,2,3}}, to_apply=%add
+}
+"""
+    s = hlocost.analyze(hlo)
+    assert s.collective_bytes["all-reduce"] == pytest.approx(
+        2 * 64 * 4 * 3 / 4)      # 2n(S-1)/S with S=4
+    assert s.collectives[0].participants == 4
+
+
+def test_collective_parsing_iota_format():
+    hlo = """
+HloModule test, entry_computation_layout={()->f32[128]{0}}
+
+ENTRY %main () -> f32[128] {
+  %c = f32[16]{0} constant({...})
+  ROOT %ag = f32[128]{0} all-gather(%c), replica_groups=[2,8]<=[16], dimensions={0}
+}
+"""
+    s = hlocost.analyze(hlo)
+    # AG link bytes: shard · (S-1) = 16·4 · 7
+    assert s.collective_bytes["all-gather"] == pytest.approx(16 * 4 * 7)
+    assert s.collectives[0].participants == 8
+
+
+def test_collective_inside_while_scaled_by_trips():
+    hlo = """
+HloModule test, entry_computation_layout={()->f32[64]{0}}
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%body (p: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %p = (s32[], f32[64]{0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[64]{0} get-tuple-element(%p), index=1
+  %ar = f32[64]{0} all-reduce(%x), replica_groups={{0,1}}, to_apply=%add
+  ROOT %t = (s32[], f32[64]{0}) tuple(%i, %ar)
+}
+
+%cond (p: (s32[], f32[64])) -> pred[] {
+  %p = (s32[], f32[64]{0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %k = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %k), direction=LT
+}
+
+ENTRY %main () -> f32[64] {
+  %c0 = s32[] constant(0)
+  %x0 = f32[64]{0} constant({...})
+  %t0 = (s32[], f32[64]{0}) tuple(%c0, %x0)
+  %w = (s32[], f32[64]{0}) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"7"}}
+  ROOT %out = f32[64]{0} get-tuple-element(%w), index=1
+}
+"""
+    s = hlocost.analyze(hlo)
+    rec = s.collectives[0]
+    assert rec.trips == 7
+    assert s.collective_bytes["all-reduce"] == pytest.approx(
+        7 * 2 * 64 * 4 * 1 / 2)
+
+
+def test_schedule_report_sorted():
+    hlo = """
+HloModule test, entry_computation_layout={()->f32[8]{0}}
+
+ENTRY %main () -> f32[8] {
+  %a = f32[1024]{0} constant({...})
+  %b = f32[8]{0} constant({...})
+  %p1 = f32[1024]{0} collective-permute(%a), source_target_pairs={{0,1}}
+  ROOT %p2 = f32[8]{0} collective-permute(%b), source_target_pairs={{0,1}}
+}
+"""
+    s = hlocost.analyze(hlo)
+    sched = hlocost.collective_schedule(s)
+    assert sched[0]["total_link_bytes"] >= sched[1]["total_link_bytes"]

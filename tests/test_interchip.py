@@ -1,0 +1,122 @@
+"""Inter-chip optimization pass tests (paper §IV)."""
+from __future__ import annotations
+
+import dataclasses
+
+import pytest
+
+from repro.core.interchip import (TrainWorkload, evaluate_plan,
+                                  optimize_inter_chip, _subdivide_dims)
+from repro.systems.chips import HBM, ICI, NVLINK, TPU_V4, H100
+from repro.systems.system import SystemSpec
+from repro.systems.topology import ring, torus2d
+from repro.workloads.llm import LLMShape, gpt_workload
+
+SMALL = LLMShape("small", n_layers=8, d_model=1024, n_heads=8, n_kv_heads=8,
+                 d_ff=4096, vocab=32000, seq=2048)
+
+
+def _system(n=16, chip=TPU_V4, topo=None):
+    return SystemSpec("sys", chip, HBM, topo or torus2d(n, ICI))
+
+
+def test_optimizer_returns_feasible_best():
+    work = gpt_workload(SMALL, global_batch=64, microbatch=1)
+    sys_ = _system(16)
+    plan = optimize_inter_chip(work, sys_)
+    assert plan.tp * plan.pp * plan.dp == 16
+    assert 0.0 < plan.utilization <= 1.0
+    assert plan.feasible
+    assert plan.iter_time > 0
+
+
+def test_fixed_combo_matches_manual_evaluate():
+    work = gpt_workload(SMALL, global_batch=64, microbatch=1)
+    sys_ = _system(16)
+    plan = optimize_inter_chip(work, sys_, fixed=(4, 2, 2))
+    assert (plan.tp, plan.pp, plan.dp) == (4, 2, 2)
+    cands = _subdivide_dims(sys_.topology, (4, 2, 2), True)
+    manual = [evaluate_plan(work, sys_, 4, 2, 2, *c) for c in cands]
+    manual = [m for m in manual if m is not None]
+    assert plan.iter_time == pytest.approx(
+        min(m.iter_time for m in manual), rel=1e-9)
+
+
+def test_optimum_beats_every_fixed_point():
+    work = gpt_workload(SMALL, global_batch=32, microbatch=1)
+    sys_ = _system(8, topo=ring(8, ICI))
+    best = optimize_inter_chip(work, sys_)
+    for combo in [(8, 1, 1), (4, 2, 1), (2, 2, 2), (1, 1, 8)]:
+        try:
+            p = optimize_inter_chip(work, sys_, fixed=combo)
+        except ValueError:
+            continue
+        if p.feasible:
+            assert best.iter_time <= p.iter_time * (1 + 1e-9)
+
+
+def test_tp_comm_grows_with_degree():
+    """More TP ⇒ more collective seconds per layer (same payload, more chips
+    in the group, and fewer FLOPs to hide it)."""
+    work = gpt_workload(SMALL, global_batch=64, microbatch=1)
+    sys_ = _system(16)
+    t2 = optimize_inter_chip(work, sys_, fixed=(2, 1, 8))
+    t8 = optimize_inter_chip(work, sys_, fixed=(8, 1, 2))
+    assert t8.breakdown["tp_comm"] > 0
+    comm_frac2 = t2.breakdown["tp_comm"] / t2.iter_time
+    comm_frac8 = t8.breakdown["tp_comm"] / t8.iter_time
+    assert comm_frac8 > comm_frac2
+
+
+def test_pipeline_bubble_fraction():
+    """bubble/(useful+bubble) = (pp-1)/(n_micro+pp-1) in the 1F1B model."""
+    work = gpt_workload(SMALL, global_batch=32, microbatch=1)
+    sys_ = _system(8, topo=ring(8, ICI))
+    plan = optimize_inter_chip(work, sys_, fixed=(1, 4, 2))
+    n_micro = plan.n_micro
+    assert n_micro == 32 // 2
+    frac = plan.breakdown["bubble"] / (
+        plan.breakdown["bubble"]
+        + n_micro * (plan.t_stage_fwd + plan.breakdown["bwd"] / n_micro))
+    assert frac == pytest.approx((4 - 1) / (n_micro + 4 - 1), rel=0.35)
+
+
+def test_memory_infeasibility_flagged():
+    big = LLMShape("big", n_layers=96, d_model=12288, n_heads=96,
+                   n_kv_heads=96, d_ff=4 * 12288, vocab=50257, seq=2048)
+    work = gpt_workload(big, global_batch=8, microbatch=1)
+    tiny_mem = dataclasses.replace(HBM, capacity=1e9)  # 1 GB per chip
+    sys_ = SystemSpec("sys", H100, tiny_mem, ring(8, ICI))
+    plan = optimize_inter_chip(work, sys_, fixed=(8, 1, 1))
+    assert not plan.feasible
+
+
+def test_subdivide_dims_respects_paper_restriction():
+    """With allow_subdivision=False a 16-ring cannot split into 4×4."""
+    topo = ring(16, ICI)
+    strict = _subdivide_dims(topo, (4, 4, 1), allow_subdivision=False)
+    relaxed = _subdivide_dims(topo, (4, 4, 1), allow_subdivision=True)
+    assert strict == []
+    assert relaxed, "subdivision must make 4x4 feasible on a 16-ring"
+    t2 = torus2d(16, ICI)
+    strict2 = _subdivide_dims(t2, (4, 4, 1), allow_subdivision=False)
+    assert strict2  # 4x4 maps directly onto the 4x4 torus dims
+
+
+def test_dp_allreduce_charged_once_per_iteration():
+    work = gpt_workload(SMALL, global_batch=64, microbatch=1)
+    sys_ = _system(16)
+    p = optimize_inter_chip(work, sys_, fixed=(1, 1, 16))
+    w_chip = work.total_weight_bytes()
+    expect = sys_.topology.all_reduce(w_chip, [0, 1])
+    assert p.breakdown["dp_comm"] == pytest.approx(expect, rel=0.5)
+
+
+def test_nvlink_never_slower_than_pcie():
+    from repro.systems.chips import PCIE
+    work = gpt_workload(SMALL, global_batch=64, microbatch=1)
+    fast = SystemSpec("f", TPU_V4, HBM, torus2d(16, NVLINK))
+    slow = SystemSpec("s", TPU_V4, HBM, torus2d(16, PCIE))
+    pf = optimize_inter_chip(work, fast)
+    ps = optimize_inter_chip(work, slow)
+    assert pf.iter_time <= ps.iter_time * (1 + 1e-9)

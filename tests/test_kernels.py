@@ -1,0 +1,173 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps in interpret mode."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.rmsnorm.ops import fused_rmsnorm
+from repro.kernels.rmsnorm.ref import fused_rmsnorm_ref
+from repro.kernels.ssd.ops import ssd_chunk
+from repro.kernels.ssd.ref import ssd_chunk_ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------ flash attention -------------------------------
+@pytest.mark.parametrize("b,h,hkv,s,hd", [
+    (1, 4, 4, 256, 64),      # MHA
+    (2, 8, 2, 512, 64),      # GQA 4:1
+    (1, 8, 1, 256, 128),     # MQA
+    (1, 4, 4, 384, 64),      # non-power-of-two seq (3 blocks)
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, h, hkv, s, hd, causal, dtype):
+    kq, kk, kv = jax.random.split(KEY, 3)
+    q = jax.random.normal(kq, (b, h, s, hd), dtype)
+    k = jax.random.normal(kk, (b, hkv, s, hd), dtype)
+    v = jax.random.normal(kv, (b, hkv, s, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        **_tol(dtype))
+
+
+def test_flash_attention_block_shape_independence():
+    q = jax.random.normal(KEY, (1, 4, 512, 64), jnp.float32)
+    k = jax.random.normal(KEY, (1, 4, 512, 64), jnp.float32)
+    v = jax.random.normal(KEY, (1, 4, 512, 64), jnp.float32)
+    a = flash_attention(q, k, v, block_q=128, block_k=128, interpret=True)
+    b = flash_attention(q, k, v, block_q=256, block_k=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------ decode attention ------------------------------
+@pytest.mark.parametrize("b,h,hkv,s,hd,kv_len", [
+    (2, 8, 2, 1024, 64, 700),
+    (1, 4, 4, 512, 128, 512),    # full cache
+    (4, 8, 1, 2048, 64, 1),      # single valid token
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(b, h, hkv, s, hd, kv_len, dtype):
+    kq, kk, kv = jax.random.split(KEY, 3)
+    q = jax.random.normal(kq, (b, h, hd), dtype)
+    k = jax.random.normal(kk, (b, hkv, s, hd), dtype)
+    v = jax.random.normal(kv, (b, hkv, s, hd), dtype)
+    o, lse = decode_attention(q, k, v, kv_len, interpret=True)
+    orf, lser = decode_attention_ref(q, k, v, kv_len, return_lse=True)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(orf, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(lser),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_decode_attention_lse_merges_shards_exactly():
+    """Sharded-KV decode + LSE combine == unsharded decode (the context-
+    parallel invariant used by parallel/context.py)."""
+    b, h, s, hd = 2, 4, 512, 64
+    kq, kk, kv = jax.random.split(KEY, 3)
+    q = jax.random.normal(kq, (b, h, hd), jnp.float32)
+    k = jax.random.normal(kk, (b, h, s, hd), jnp.float32)
+    v = jax.random.normal(kv, (b, h, s, hd), jnp.float32)
+    kv_len = 400
+    o_full, _ = decode_attention_ref(q, k, v, kv_len, return_lse=True)
+    parts = []
+    for shard in range(2):
+        ks = k[:, :, shard * 256:(shard + 1) * 256]
+        vs = v[:, :, shard * 256:(shard + 1) * 256]
+        local_len = np.clip(kv_len - shard * 256, 0, 256)
+        o, lse = decode_attention_ref(q, ks, vs, int(local_len),
+                                      return_lse=True)
+        parts.append((o, lse))
+    m = jnp.maximum(parts[0][1], parts[1][1])
+    w0, w1 = jnp.exp(parts[0][1] - m), jnp.exp(parts[1][1] - m)
+    merged = (parts[0][0] * w0[..., None] + parts[1][0] * w1[..., None]) / (
+        (w0 + w1)[..., None])
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(o_full),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------ fused rmsnorm ---------------------------------
+@pytest.mark.parametrize("t,d", [(256, 128), (512, 256), (1024, 1024)])
+@pytest.mark.parametrize("with_residual", [False, True])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_rmsnorm_sweep(t, d, with_residual, dtype):
+    kx, kw, kr = jax.random.split(KEY, 3)
+    x = jax.random.normal(kx, (t, d), dtype)
+    w = (jax.random.normal(kw, (d,), jnp.float32) * 0.1 + 1.0)
+    r = jax.random.normal(kr, (t, d), dtype) if with_residual else None
+    y, res = fused_rmsnorm(x, w, r, interpret=True)
+    yr, resr = fused_rmsnorm_ref(x, w, r)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(res, np.float32),
+                               np.asarray(resr, np.float32), **_tol(dtype))
+
+
+# ------------------------------ SSD chunk scan --------------------------------
+@pytest.mark.parametrize("bh,s,p,n,chunk", [
+    (2, 256, 64, 128, 128),
+    (4, 512, 64, 128, 128),
+    (1, 256, 128, 128, 64),
+])
+def test_ssd_chunk_sweep(bh, s, p, n, chunk):
+    kx, kd, kb, kc = jax.random.split(KEY, 4)
+    x = jax.random.normal(kx, (bh, s, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(kd, (bh, s), jnp.float32))
+    B = jax.random.normal(kb, (bh, s, n), jnp.float32) * 0.3
+    C = jax.random.normal(kc, (bh, s, n), jnp.float32) * 0.3
+    dA = -0.1 * dt
+    y, hf = ssd_chunk(x, dt, B, C, dA, chunk=chunk, interpret=True)
+    # oracle: chunked reference with carried state
+    ys, hs = [], []
+    for i in range(bh):
+        h_in = jnp.zeros((n, p))
+        outs = []
+        for c in range(s // chunk):
+            sl = slice(c * chunk, (c + 1) * chunk)
+            yc, h_in = ssd_chunk_ref(x[i, sl], dt[i, sl], B[i, sl],
+                                     C[i, sl], dA[i, sl], h_in)
+            outs.append(yc)
+        ys.append(jnp.concatenate(outs, 0))
+        hs.append(h_in)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(jnp.stack(ys)),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(jnp.stack(hs)),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_kernel_matches_layer_scan():
+    """The kernel's chunked recurrence equals models.layers' _ssd_chunk_scan
+    (the structural twin used by the model)."""
+    from repro.models.layers import _ssd_chunk_scan
+    b, s, h, p, n = 2, 256, 2, 64, 128
+    kx, kd, kb, kc = jax.random.split(KEY, 4)
+    xs = jax.random.normal(kx, (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(kd, (b, s, h), jnp.float32))
+    B = jax.random.normal(kb, (b, s, n), jnp.float32) * 0.3
+    C = jax.random.normal(kc, (b, s, n), jnp.float32) * 0.3
+    A_log = jnp.zeros((h,))
+    y_layer, _ = _ssd_chunk_scan(xs, dt, B, C, A_log, chunk=128)
+    # kernel path: flatten (b, h) and precompute dA = dt * (-exp(A_log))
+    xs_k = xs.transpose(0, 2, 1, 3).reshape(b * h, s, p)
+    dt_k = dt.transpose(0, 2, 1).reshape(b * h, s)
+    dA_k = dt_k * (-jnp.exp(A_log)).repeat(b)[..., None].reshape(b * h, 1)
+    B_k = jnp.repeat(B[:, None], h, 1).reshape(b * h, s, n)
+    C_k = jnp.repeat(C[:, None], h, 1).reshape(b * h, s, n)
+    y_k, _ = ssd_chunk(xs_k, dt_k, B_k, C_k, dA_k, chunk=128, interpret=True)
+    y_k = y_k.reshape(b, h, s, p).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_layer),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,98 @@
+"""Property tests for the assignment-matrix formulation (paper Eqs. 1-4)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.graph import DataflowGraph, Kernel, Tensor
+from repro.core.matrices import (assignment_matrix, matrix_B, matrix_D,
+                                 matrix_H, matrix_L, partition_summaries,
+                                 upper_triangular_masks, validate_assignment)
+
+from conftest import dags_with_assignments
+
+
+@given(dags_with_assignments())
+@settings(max_examples=200, deadline=None)
+def test_matrix_identities(case):
+    """The invariants the paper's MIP relies on, on random DAGs."""
+    g, assign, p_max = case
+    A = assignment_matrix(assign, p_max)
+    B = matrix_B(g, A)
+    D = matrix_D(g, A)
+    L = matrix_L(g, A)
+    H = matrix_H(g, A)
+
+    # A·1 = 1 (one-hot rows)
+    assert (A.sum(axis=1) == 1).all()
+
+    part = assign
+    for j, t in enumerate(g.tensors):
+        ps = part[g.kernel_index(t.src)]
+        pd = part[g.kernel_index(t.dst)]
+        if ps == pd:
+            # intra-partition: B one-hot at the shared partition, D/L empty
+            assert B[j].sum() == 1 and B[j, ps]
+            assert D[j].sum() == 0
+            assert L[j].sum() == 0
+        else:
+            # cross-partition: D marks exactly the two endpoints
+            assert B[j].sum() == 0
+            assert D[j].sum() == 2 and D[j, ps] and D[j, pd]
+            # L covers the closed interval [ps, pd]
+            lo, hi = min(ps, pd), max(ps, pd)
+            expect = np.zeros(p_max, dtype=bool)
+            expect[lo:hi + 1] = True
+            assert (L[j] == expect).all(), (ps, pd, L[j])
+        # H = producer placement
+        assert H[j].argmax() == ps and H[j].sum() == 1
+
+
+@given(dags_with_assignments())
+@settings(max_examples=100, deadline=None)
+def test_partition_summaries_match_bruteforce(case):
+    g, assign, p_max = case
+    s = partition_summaries(g, assign, p_max)
+    f = np.zeros(p_max)
+    w = np.zeros(p_max)
+    sram = np.zeros(p_max)
+    xfer = np.zeros(p_max)
+    for i, k in enumerate(g.kernels):
+        f[assign[i]] += k.flops
+        w[assign[i]] += k.weight_bytes
+    for t in g.tensors:
+        ps = assign[g.kernel_index(t.src)]
+        pd = assign[g.kernel_index(t.dst)]
+        if ps == pd:
+            sram[ps] += t.bytes_
+        else:
+            xfer[ps] += t.bytes_
+            xfer[pd] += t.bytes_
+    np.testing.assert_allclose(s["flops"], f, rtol=1e-12)
+    np.testing.assert_allclose(s["weight_bytes"], w, rtol=1e-12)
+    np.testing.assert_allclose(s["sram_bytes"], sram, rtol=1e-12)
+    np.testing.assert_allclose(s["dram_xfer"], xfer, rtol=1e-12)
+
+
+def test_upper_triangular_masks():
+    U_s, U_t = upper_triangular_masks(4)
+    assert U_s[1, 1] and not U_t[1, 1]
+    assert U_s[0, 3] and U_t[0, 3]
+    assert not U_s[2, 1]
+
+
+def test_validate_assignment_rejects_precedence_violation():
+    g = DataflowGraph([Kernel("a", 1.0), Kernel("b", 1.0)],
+                      [Tensor("t", "a", "b", 1.0)])
+    A = assignment_matrix(np.array([1, 0]), 2)   # consumer before producer
+    with pytest.raises(ValueError):
+        validate_assignment(g, A)
+    validate_assignment(g, assignment_matrix(np.array([0, 1]), 2))  # ok
+
+
+def test_assignment_matrix_bounds():
+    with pytest.raises(ValueError):
+        assignment_matrix(np.array([0, 3]), 3)  # index == p_max
+    with pytest.raises(ValueError):
+        assignment_matrix(np.array([[0], [1]]), 2)  # not 1-D

@@ -1,0 +1,135 @@
+"""Reproduction of the paper's headline quantitative claims.
+
+Each test pins one claim from the paper to the analytical core. Exact
+magnitudes depend on constants the paper does not publish, so tests assert
+the *direction* and the *order of magnitude band* of each claim; the
+benchmark harness reports the exact reproduced numbers.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import pytest
+
+from repro.core.costpower import silicon_power_w
+from repro.core.intrachip import (evaluate_intra_assignment,
+                                  optimize_intra_chip)
+from repro.core.sharding import solve_sharding
+from repro.systems.chips import DDR, ICI, PCIE, SN10
+from repro.systems.system import SystemSpec
+from repro.systems.topology import ring, torus2d
+from repro.workloads.llm import GPT3_175B, gpt_layer_graph
+
+# §VII experiment: GPT3 175B on 8 SN10 RDUs, DDR 200GB/s, PCIe 25GB/s
+DDR_200 = dataclasses.replace(DDR, bandwidth=200e9)
+RING8 = ring(8, PCIE)
+TORUS42 = torus2d(8, PCIE)
+
+VENDOR = {"LN1": 0, "QKV": 0, "MHA1": 1, "Softmax": 1, "MHA2": 1,
+          "Proj": 1, "Add1": 1, "LN2": 1, "FFN0": 2, "FFN1": 3, "Add2": 3}
+
+
+def _mapping_times(tp: int, topo):
+    """(kbk, vendor, dfmodel) per-microbatch times for one GPT3-175B layer."""
+    g = gpt_layer_graph(dataclasses.replace(GPT3_175B, batch=1))
+    sol = solve_sharding(g, tp, topo, list(range(len(topo.dims))))
+    sharded = g.scaled(flop_scale=1.0 / tp, bytes_scale=1.0 / tp)
+    kbk = optimize_intra_chip(sharded, SN10, DDR_200, h_n=sol.h_n,
+                              h_m=sol.h_m, mode="kbk")
+    vendor = evaluate_intra_assignment(
+        sharded, [VENDOR[k.name] for k in sharded.kernels], SN10, DDR_200,
+        h_n=sol.h_n, h_m=sol.h_m)
+    df = optimize_intra_chip(sharded, SN10, DDR_200, h_n=sol.h_n,
+                             h_m=sol.h_m, p_max=8)
+    return kbk.total_time, vendor.total_time, df.total_time
+
+
+def test_table_vi_mapping_ladder():
+    """Table VI: dataflow vs non-dataflow 4.05×; DFModel vs vendor 1.19×;
+    4×2 torus vs 8×1 ring 1.28×; cumulative 6.13×."""
+    kbk, vendor, df81 = _mapping_times(8, RING8)
+    # step 1: vendor dataflow vs non-dataflow — paper 4.05× *against
+    # Calculon's own mapping*. Our kbk baseline reuses DFModel's utilization
+    # model, so it is less pessimistic than Calculon (which under-predicts
+    # dataflow systems by 60%, Fig 6); the reproduced advantage is smaller
+    # but strictly > 1 (see EXPERIMENTS.md §Validation).
+    s1 = kbk / vendor
+    assert 1.4 < s1 < 8.0, s1
+    # step 2: DFModel mapping vs vendor on the same ring — paper 1.19×
+    s2 = vendor / df81
+    assert 1.0 <= s2 < 2.0, s2
+    # step 3: 4×2 torus — TP drops 8→4, DP=2 replicas run concurrently, so
+    # system throughput doubles per microbatch-time: paper 1.28×
+    _, _, df42 = _mapping_times(4, TORUS42)
+    s3 = 2.0 * df81 / df42
+    assert 1.0 < s3 < 2.5, s3
+    total = 2.0 * kbk / df42
+    assert 2.0 < total < 12.0, total  # paper: 6.13×
+
+
+def test_fig19_dataflow_upper_bounds_nondataflow():
+    """Fig 19: dataflow ≥ non-dataflow on every memory design point, with
+    the average advantage in the paper's 1.63× band."""
+    g = gpt_layer_graph(dataclasses.replace(GPT3_175B, batch=1)).scaled(
+        1.0 / 8, 1.0 / 8)
+    chip300 = dataclasses.replace(SN10, tiles=1000,
+                                  tile_flops=300e12 / 1000)
+    ratios = []
+    for sram_mb in (150, 300, 500):
+        for bw_gb in (100, 300, 600):
+            chip = dataclasses.replace(chip300, sram_capacity=sram_mb * 1e6)
+            mem = dataclasses.replace(DDR, bandwidth=bw_gb * 1e9)
+            df = optimize_intra_chip(g, chip, mem)
+            kbk = optimize_intra_chip(g, chip, mem, mode="kbk")
+            assert df.total_time <= kbk.total_time * (1 + 1e-9)
+            ratios.append(kbk.total_time / df.total_time)
+    avg = sum(ratios) / len(ratios)
+    assert 1.2 < avg < 4.0, avg  # paper: 1.63×
+
+
+def test_fig19_sram_and_bandwidth_trends():
+    g = gpt_layer_graph(dataclasses.replace(GPT3_175B, batch=1)).scaled(
+        1.0 / 8, 1.0 / 8)
+    # dataflow gains from SRAM (more fusion)
+    t_small = optimize_intra_chip(
+        g, dataclasses.replace(SN10, sram_capacity=150e6), DDR_200).total_time
+    t_large = optimize_intra_chip(
+        g, dataclasses.replace(SN10, sram_capacity=500e6), DDR_200).total_time
+    assert t_large <= t_small * (1 + 1e-9)
+    # kbk gains from DRAM bandwidth
+    k_slow = optimize_intra_chip(
+        g, SN10, dataclasses.replace(DDR, bandwidth=100e9),
+        mode="kbk").total_time
+    k_fast = optimize_intra_chip(
+        g, SN10, dataclasses.replace(DDR, bandwidth=600e9),
+        mode="kbk").total_time
+    assert k_fast < k_slow
+
+
+def test_fig9_power_superlinearity():
+    """Fig 9: silicon power grows superlinearly with compute throughput."""
+    p1 = silicon_power_w(100)
+    p2 = silicon_power_w(200)
+    p4 = silicon_power_w(400)
+    assert p2 / p1 > 2 * 0.99        # ≥ linear
+    assert p4 / p2 > p2 / p1          # accelerating
+    # Table V anchors within a generous band
+    assert 500 < silicon_power_w(993) < 1000      # H100: 700 W
+    assert 100 < silicon_power_w(275) < 250       # TPUv4: 192 W
+    assert 10_000 < silicon_power_w(7500) < 25_000  # WSE-2
+
+
+def test_dataflow_mapping_reduces_memory_boundedness():
+    """Fig 18 narrative: kbk is heavily memory-bound; the dataflow mapping
+    moves the bottleneck away from memory."""
+    g = gpt_layer_graph(dataclasses.replace(GPT3_175B, batch=1)).scaled(
+        1.0 / 8, 1.0 / 8)
+    kbk = optimize_intra_chip(g, SN10, DDR_200, mode="kbk")
+    df = optimize_intra_chip(g, SN10, DDR_200)
+    mem_frac_kbk = kbk.t_mem.sum() / kbk.t_critical.sum()
+    mem_frac_df = df.t_mem.sum() / (df.t_comp.sum() + df.t_mem.sum()
+                                    + df.t_net.sum())
+    # kbk spends a large share of its time on DRAM; fusion removes most of it
+    assert mem_frac_kbk > 0.35
+    assert mem_frac_df < mem_frac_kbk
+    assert df.dram_traffic < kbk.dram_traffic / 2

@@ -1,0 +1,137 @@
+"""Serving engine + §VIII analytical serving/spec-decode model tests."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core.serving import (expected_accepted, serving_sweep,
+                                speculative_throughput)
+from repro.models import init_params
+from repro.serve.engine import ServeEngine
+from repro.systems.chips import HBM_V5E, ICI, SN40L
+from repro.systems.system import SystemSpec
+from repro.systems.topology import torus2d
+from repro.workloads.llm import LLAMA3_8B, decode_layer_graph, gpt_layer_graph
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------ executable engine -----------------------------
+def test_engine_generates_tokens():
+    cfg = get_config("olmo_1b", smoke=True)
+    params = init_params(cfg, KEY)
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=64)
+    prompts = jax.random.randint(KEY, (2, 8), 0, cfg.vocab)
+    res = eng.generate(prompts, n_tokens=6)
+    toks = jnp.asarray(res.tokens).T          # (B, n_tokens)
+    assert toks.shape == (2, 6)
+    assert res.ttft > 0 and res.tpot > 0 and res.tokens_per_s > 0
+    assert bool((toks >= 0).all()) and bool((toks < cfg.vocab).all())
+
+
+def test_engine_greedy_matches_forward_continuation():
+    """Greedy generation must follow the model's own argmax continuation."""
+    from repro.models import forward
+    cfg = get_config("olmo_1b", smoke=True)
+    params = init_params(cfg, KEY)
+    eng = ServeEngine(cfg, params, max_batch=1, max_len=32)
+    prompts = jax.random.randint(jax.random.PRNGKey(3), (1, 8), 0, cfg.vocab)
+    res = eng.generate(prompts, n_tokens=3)
+    # reference: iterated full forward
+    seq = prompts
+    want = []
+    for _ in range(3):
+        logits = forward(cfg, params, seq, remat=False)
+        nxt = logits[:, -1].argmax(-1)
+        want.append(int(nxt[0]))
+        seq = jnp.concatenate([seq, nxt[:, None]], axis=1)
+    got = [int(t[0]) for t in res.tokens]
+    assert got == want
+
+
+def test_engine_ssm_generates():
+    cfg = get_config("mamba2_130m", smoke=True)
+    params = init_params(cfg, KEY)
+    eng = ServeEngine(cfg, params, max_batch=1, max_len=48)
+    prompts = jax.random.randint(KEY, (1, 8), 0, cfg.vocab)
+    res = eng.generate(prompts, n_tokens=4)
+    assert len(res.tokens) == 4
+
+
+# ------------------------------ analytical §VIII.A ----------------------------
+def _sn40l_system(n=16):
+    topo = torus2d(n, ICI)
+    return SystemSpec("sn40l", SN40L, HBM_V5E, topo)
+
+
+def test_serving_sweep_tradeoffs():
+    """Paper Fig 20: increasing TP decreases TTFT/TPOT; increasing PP
+    increases system-level throughput."""
+    s = dataclasses.replace(LLAMA3_8B, batch=1)
+    pre = gpt_layer_graph(s)
+    dec = decode_layer_graph(s, kv_len=8192)
+    pts = serving_sweep(pre, dec, n_layers=32, system=_sn40l_system(16))
+    assert len(pts) >= 3
+    by_tp = {p.tp: p for p in pts}
+    tps = sorted(by_tp)
+    # TTFT monotonically non-increasing in TP (more chips shard the prefill)
+    assert by_tp[tps[-1]].ttft < by_tp[tps[0]].ttft
+    # PP>1 point has higher decode throughput than its TPOT-1/x implies
+    pp_pts = [p for p in pts if p.pp > 1]
+    if pp_pts:
+        p = pp_pts[0]
+        assert p.decode_throughput * p.tpot > 0.99  # pipelined slots ≥ 1/x
+
+
+def test_decode_is_memory_or_network_bound():
+    """Paper: 'in the decode phase most time is spent on memory and network'."""
+    s = dataclasses.replace(LLAMA3_8B, batch=8)
+    dec = decode_layer_graph(s, kv_len=8192)
+    pre = gpt_layer_graph(dataclasses.replace(s, batch=1))
+    pts = serving_sweep(pre, dec, n_layers=32, system=_sn40l_system(16))
+    tp16 = [p for p in pts if p.tp == 16]
+    assert tp16
+    bd = tp16[0].breakdown_decode
+    assert bd["memory"] + bd["network"] > bd["compute"]
+
+
+# ------------------------------ §VIII.B spec decode ----------------------------
+def test_expected_accepted_formulas():
+    # sequence: geometric series
+    assert expected_accepted(3, 0.0, "sequence") == pytest.approx(1.0)
+    assert expected_accepted(3, 1.0, "sequence") == pytest.approx(4.0)
+    assert expected_accepted(2, 0.5, "sequence") == pytest.approx(1.75)
+    # tree boosts the effective acceptance
+    assert expected_accepted(3, 0.5, "tree") > expected_accepted(
+        3, 0.5, "sequence")
+
+
+def test_specdecode_monotonic_in_acceptance_and_window():
+    td, tv = 1e-3, 1e-2
+    t1 = speculative_throughput(td, tv, window=4, acceptance=0.5)
+    t2 = speculative_throughput(td, tv, window=4, acceptance=0.9)
+    assert t2 > t1
+    t3 = speculative_throughput(td, tv, window=8, acceptance=0.9)
+    assert t3 > t1
+
+
+def test_specdecode_tree_prefers_small_windows():
+    """Paper: tree-based needs small windows — the 2^K draft cost blows up."""
+    td, tv = 1e-3, 1e-2
+    small = speculative_throughput(td, tv, window=2, acceptance=0.7,
+                                   scheme="tree")
+    huge = speculative_throughput(td, tv, window=10, acceptance=0.7,
+                                  scheme="tree")
+    assert small > huge
+
+
+def test_specdecode_large_draft_model_overhead():
+    """Paper: a 70B draft for a 405B target has too much overhead vs 8B."""
+    tv = 20e-3
+    t8 = speculative_throughput(1e-3, tv, window=4, acceptance=0.8)
+    t70 = speculative_throughput(8e-3, tv, window=4, acceptance=0.9)
+    assert t8 > t70

@@ -1,0 +1,132 @@
+"""Solver engines vs brute force (the Gurobi-optimality-certificate analogue)."""
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.graph import chain_graph, Kernel
+from repro.core.solver import (bounds_to_assign, branch_and_bound,
+                               design_space_size, enumerate_parallelism,
+                               minmax_partition, minsum_partition)
+
+from conftest import dags
+
+
+def _brute_minmax(costs, p):
+    n = len(costs)
+    best = float("inf")
+    for cuts in itertools.combinations(range(1, n), min(p, n) - 1):
+        bounds = [0, *cuts, n]
+        m = max(sum(costs[bounds[i]:bounds[i + 1]])
+                for i in range(len(bounds) - 1))
+        best = min(best, m)
+    return best
+
+
+@given(st.lists(st.floats(min_value=0.1, max_value=100.0),
+                min_size=2, max_size=9),
+       st.integers(min_value=1, max_value=4))
+@settings(max_examples=150, deadline=None)
+def test_minmax_partition_optimal(costs, p):
+    bounds, obj = minmax_partition(costs, p)
+    assert len(bounds) == min(p, len(costs))
+    assert bounds[0] == 0
+    # objective matches the returned split
+    assign = bounds_to_assign(bounds, len(costs))
+    groups = [sum(c for c, a in zip(costs, assign) if a == g)
+              for g in range(max(assign) + 1)]
+    assert obj == pytest.approx(max(groups), rel=1e-9)
+    # and is optimal
+    assert obj == pytest.approx(_brute_minmax(costs, p), rel=1e-9)
+
+
+def _brute_minsum(costs, p_max, cap, pref):
+    n = len(costs)
+    best = float("inf")
+    for p in range(1, min(p_max, n) + 1):
+        for cuts in itertools.combinations(range(1, n), p - 1):
+            bounds = [0, *cuts, n]
+            if any(pref[bounds[i + 1]] - pref[bounds[i]] > cap
+                   for i in range(len(bounds) - 1)):
+                continue
+            best = min(best, sum(max(costs[bounds[i]:bounds[i + 1]])
+                                 for i in range(len(bounds) - 1)))
+    return best
+
+
+@given(st.lists(st.floats(min_value=0.1, max_value=10.0),
+                min_size=2, max_size=8),
+       st.integers(min_value=1, max_value=5),
+       st.floats(min_value=5.0, max_value=100.0))
+@settings(max_examples=150, deadline=None)
+def test_minsum_partition_optimal(costs, p_max, cap):
+    n = len(costs)
+    pref = np.concatenate([[0.0], np.cumsum(costs)])
+
+    def group_cost(i, j):
+        return max(costs[i:j])
+
+    def feasible(i, j):
+        return pref[j] - pref[i] <= cap
+
+    expect = _brute_minsum(costs, p_max, cap, pref)
+    if not np.isfinite(expect):
+        with pytest.raises(ValueError):
+            minsum_partition(n, p_max, group_cost, feasible)
+        return
+    bounds, obj = minsum_partition(n, p_max, group_cost, feasible)
+    assert obj == pytest.approx(expect, rel=1e-9)
+    # split respects the capacity
+    assign = bounds_to_assign(bounds, n)
+    for g in range(max(assign) + 1):
+        assert sum(c for c, a in zip(costs, assign) if a == g) <= cap * (1 + 1e-9)
+
+
+@given(dags(max_kernels=6))
+@settings(max_examples=30, deadline=None)
+def test_branch_and_bound_beats_or_matches_contiguous_dp(g):
+    """B&B searches the full precedence lattice; the DP restricts to
+    contiguous topo intervals. B&B must never be worse; on min-max costs of
+    this form it matches (the restriction is lossless)."""
+    p_max = 3
+    f = np.array([k.flops for k in g.kernels])
+    order = g.topo_order
+
+    def objective(assign):
+        groups = np.zeros(p_max)
+        for i, p in enumerate(assign):
+            groups[p] += f[i]
+        return groups.max()
+
+    ba, bc = branch_and_bound(g, p_max, objective)
+    costs = [f[i] for i in order]
+    _, dp_obj = minmax_partition(costs, p_max)
+    assert bc <= dp_obj * (1 + 1e-9)
+    assert bc == pytest.approx(dp_obj, rel=1e-9)
+
+
+def test_enumerate_parallelism_exact_cover():
+    for n in (8, 24, 256):
+        combos = enumerate_parallelism(n)
+        assert all(tp * pp * dp == n for tp, pp, dp in combos)
+        assert len(set(combos)) == len(combos)
+        # number of ordered factorizations into 3 factors
+        brute = sum(1 for tp in range(1, n + 1) if n % tp == 0
+                    for pp in range(1, n + 1)
+                    if (n // tp) % pp == 0)
+        assert len(combos) == brute
+    assert enumerate_parallelism(16, max_tp=4) == [
+        c for c in enumerate_parallelism(16) if c[0] <= 4]
+
+
+def test_design_space_size_matches_paper_scale():
+    """Paper: O(10^295) for a trillion-param LLM on a thousand accelerators."""
+    layer = chain_graph([Kernel(f"k{i}", 1.0) for i in range(96)],
+                        [1.0] * 95)
+    logsize = design_space_size(layer, p_max=96, n_chips=1024,
+                                schemes_per_kernel=3)
+    assert logsize > 100  # astronomically large, solved in seconds by the DP

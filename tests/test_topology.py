@@ -1,0 +1,86 @@
+"""Collective cost model tests (paper §IV.C / ASTRA-sim composition)."""
+from __future__ import annotations
+
+import pytest
+
+from repro.systems.chips import ICI, NVLINK, PCIE
+from repro.systems.topology import (TOPOLOGIES, Topology, TopologyDim,
+                                    dragonfly, fully_connected, ring, switch,
+                                    torus2d, torus3d)
+
+GB = 1e9
+
+
+def test_ring_closed_forms():
+    d = TopologyDim(8, "ring", ICI)
+    n = 1e9
+    bw = ICI.bandwidth
+    assert d.all_gather(n) == pytest.approx(7 / 8 * n / bw + 7 * ICI.latency)
+    assert d.reduce_scatter(n) == pytest.approx(d.all_gather(n))
+    assert d.all_reduce(n) == pytest.approx(2 * d.all_gather(n))
+    assert d.all_gather(0.0) == pytest.approx(7 * ICI.latency)
+    assert TopologyDim(1, "ring", ICI).all_reduce(n) == 0.0
+
+
+def test_fc_beats_ring_for_all_to_all():
+    n = 1e9
+    r = TopologyDim(16, "ring", PCIE)
+    f = TopologyDim(16, "fc", PCIE)
+    assert f.all_to_all(n) < r.all_to_all(n)
+    assert f.all_gather(n) < r.all_gather(n)
+
+
+def test_topology_families_chip_counts():
+    for name in ("ring", "torus2d", "torus3d", "dgx1", "dgx2", "dragonfly",
+                 "switch", "fc"):
+        topo = TOPOLOGIES[name](1024, NVLINK)
+        assert topo.total_chips == 1024, name
+
+
+def test_torus_shapes():
+    t2 = torus2d(256, ICI)
+    assert sorted(d.size for d in t2.dims) == [16, 16]
+    t3 = torus3d(512, ICI)
+    sizes = sorted(d.size for d in t3.dims)
+    assert sizes[0] * sizes[1] * sizes[2] == 512
+
+
+def test_multidim_all_reduce_blueconnect():
+    """Multi-dim AR = RS inward + AG outward on shrinking shards; must be
+    cheaper than running the full AR on the flattened ring."""
+    topo = torus2d(256, ICI)
+    n = 1e9
+    two_dim = topo.all_reduce(n, [0, 1])
+    flat = ring(256, ICI).all_reduce(n, [0])
+    assert two_dim < flat
+    # and more expensive than a hypothetical single 16-ring on the same data
+    assert two_dim > TopologyDim(16, "ring", ICI).all_reduce(n) * 0.99
+
+
+def test_all_reduce_equals_rs_plus_ag_single_dim():
+    topo = ring(8, ICI)
+    n = 2e9
+    assert topo.all_reduce(n, [0]) == pytest.approx(
+        topo.reduce_scatter(n, [0]) + topo.all_gather(n, [0]))
+
+
+def test_monotonic_in_payload():
+    topo = dragonfly(64, PCIE)
+    assert topo.all_to_all(2e9, [0, 1]) > topo.all_to_all(1e9, [0, 1])
+    assert topo.p2p(2e9, [0]) > topo.p2p(1e9, [0])
+
+
+def test_links_per_chip():
+    assert TopologyDim(8, "ring", ICI).links_per_chip == 2.0
+    assert TopologyDim(8, "fc", ICI).links_per_chip == 7.0
+    assert TopologyDim(8, "switch", ICI).links_per_chip == 1.0
+    assert TopologyDim(1, "ring", ICI).links_per_chip == 0.0
+    assert torus2d(256, ICI).links_per_chip() == 4.0
+
+
+def test_nvlink_dominates_pcie():
+    n = 1e9
+    for kind in ("ring", "fc", "switch"):
+        slow = TopologyDim(16, kind, PCIE)
+        fast = TopologyDim(16, kind, NVLINK)
+        assert fast.all_reduce(n) < slow.all_reduce(n)

@@ -1,0 +1,203 @@
+"""Training substrate tests: optimizer, accumulation, checkpointing,
+fault tolerance, compression, data pipeline."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models import init_params, synth_batch
+from repro.parallel.compression import (compress_tree, decompress_tree,
+                                        dequantize_int8, quantize_int8)
+from repro.train.checkpoint import CheckpointManager
+from repro.train.data import MemmapTokens, SyntheticTokens
+from repro.train.fault import Heartbeat, StragglerMonitor, retry_step
+from repro.train.optimizer import (AdamWConfig, adamw_init, adamw_update,
+                                   cosine_schedule, global_norm)
+from repro.train.trainer import make_train_step
+
+CFG = get_config("olmo_1b", smoke=True)
+KEY = jax.random.PRNGKey(0)
+
+
+def test_grad_accumulation_equivalence():
+    """accum=2 must produce the same update as accum=1 on the same batch."""
+    params = init_params(CFG, KEY)
+    batch = synth_batch(CFG, batch=4, seq=32)
+    opt_cfg = AdamWConfig(lr=1e-3)
+    s1 = jax.jit(make_train_step(CFG, opt_cfg, accum=1))
+    s2 = jax.jit(make_train_step(CFG, opt_cfg, accum=2))
+    p1, o1, m1 = s1(params, adamw_init(params), batch)
+    p2, o2, m2 = s2(params, adamw_init(params), batch)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-3)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        # Adam's rsqrt(v)+eps amplifies bf16 rounding on near-zero grads;
+        # equivalence is up to dtype noise, not bitwise
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-2, atol=2e-3)
+
+
+def test_adamw_grad_clipping():
+    params = {"w": jnp.ones((4,), jnp.float32)}
+    huge = {"w": jnp.full((4,), 1e6, jnp.float32)}
+    cfg = AdamWConfig(lr=1.0, grad_clip=1.0, weight_decay=0.0)
+    state = adamw_init(params)
+    p2, _ = adamw_update(params, huge, state, cfg)
+    # post-clip global norm is 1 ⇒ first Adam step magnitude ≈ lr
+    assert float(jnp.abs(p2["w"] - params["w"]).max()) < 1.5
+
+
+def test_cosine_schedule_shape():
+    fn = cosine_schedule(1.0, warmup=10, total=100)
+    assert float(fn(jnp.int32(0))) == pytest.approx(0.0)
+    assert float(fn(jnp.int32(10))) == pytest.approx(1.0, abs=1e-3)
+    assert float(fn(jnp.int32(100))) == pytest.approx(0.0, abs=1e-6)
+    assert float(fn(jnp.int32(55))) > float(fn(jnp.int32(90)))
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    params = init_params(CFG, KEY)
+    opt = adamw_init(params)
+    mgr.save(7, {"params": params, "opt": opt})
+    step, tree = mgr.restore()
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(tree["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    tree = {"x": jnp.arange(4)}
+    for s in (1, 2, 3):
+        mgr.save(s, tree)
+    assert mgr.latest_step() == 3
+    ckpts = sorted(tmp_path.glob("ckpt_*.npz"))
+    assert len(ckpts) == 2  # oldest garbage-collected
+
+
+def test_checkpoint_async_and_atomicity(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    for s in range(3):
+        mgr.save_async(s, {"x": jnp.full((8,), s)})
+    mgr.wait()
+    assert mgr.latest_step() == 2
+    # no stray temp files (atomic os.replace)
+    assert not list(tmp_path.glob("*.tmp.npz"))
+    _, tree = mgr.restore(2)
+    assert float(tree["x"][0]) == 2.0
+
+
+def test_checkpoint_elastic_restore_resharding(tmp_path):
+    """A checkpoint written under one layout restores onto another sharding
+    (single-device here; the API contract is sharding-pytree-driven)."""
+    mgr = CheckpointManager(tmp_path)
+    tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+    mgr.save(1, tree)
+    from jax.sharding import SingleDeviceSharding
+    sh = {"w": SingleDeviceSharding(jax.devices()[0])}
+    _, restored = mgr.restore(1, shardings=sh)
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]))
+
+
+def test_straggler_monitor_flags_outliers():
+    mon = StragglerMonitor(threshold=2.0, warmup=3)
+    for step in range(10):
+        assert not mon.record(step, 0.1)
+    assert mon.record(10, 0.5)           # 5× the mean → flagged
+    assert not mon.record(11, 0.1)       # baseline not poisoned
+    assert mon.straggler_fraction == pytest.approx(1 / 12)
+
+
+def test_retry_step_restores_and_replays(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, {"params": {"w": jnp.ones(2)}, "opt": {"s": jnp.zeros(1)}})
+    calls = {"n": 0}
+
+    def flaky(params, opt_state, batch):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("hard fault")
+        return params, opt_state, {"loss": jnp.float32(0.0)}
+
+    wrapped = retry_step(flaky, mgr, max_retries=2)
+    out = wrapped({"w": jnp.zeros(2)}, {"s": jnp.zeros(1)}, None, step=5)
+    assert calls["n"] == 2
+    assert out[2]["loss"] == 0.0
+
+
+def test_heartbeat_writes(tmp_path):
+    hb = Heartbeat(tmp_path / "hb")
+    hb.beat(42)
+    assert (tmp_path / "hb").read_text().startswith("42 ")
+
+
+# ------------------------------ compression ----------------------------------
+def test_int8_quantization_error_bound():
+    g = jax.random.normal(KEY, (1000,), jnp.float32) * 3.0
+    q, scale, shape = quantize_int8(g, block=256)
+    rec = dequantize_int8(q, scale, shape)
+    # per-block max-abs scaling: error ≤ scale/2 per element
+    err = np.abs(np.asarray(rec - g))
+    bound = np.repeat(np.asarray(scale)[:, 0], 256)[:1000] * 0.5 + 1e-7
+    assert (err <= bound).all()
+
+
+def test_error_feedback_reduces_bias():
+    """With error feedback, the accumulated compressed sum converges to the
+    true sum (EF-SGD property) — without it, bias persists."""
+    g = jax.random.normal(KEY, (512,), jnp.float32) * 0.01
+    tree = {"g": g}
+    err = None
+    total = jnp.zeros_like(g)
+    for _ in range(20):
+        comp, err = compress_tree(tree, err)
+        total = total + decompress_tree(comp)["g"]
+    np.testing.assert_allclose(np.asarray(total / 20), np.asarray(g),
+                               atol=2e-4)
+
+
+def test_compression_ratio():
+    g = jnp.ones((1024,), jnp.float32)
+    q, scale, _ = quantize_int8(g, block=256)
+    raw = g.size * 4
+    comp = q.size * 1 + scale.size * 4
+    assert comp < raw / 3
+
+
+# ------------------------------ data pipeline ---------------------------------
+def test_synthetic_tokens_deterministic():
+    a = next(iter(SyntheticTokens(vocab=100, batch=2, seq=8, seed=3)))
+    b = next(iter(SyntheticTokens(vocab=100, batch=2, seq=8, seed=3)))
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+    assert a["labels"].shape == (2, 8)
+
+
+def test_memmap_tokens_rank_sharding_and_resume(tmp_path):
+    path = tmp_path / "corpus.bin"
+    MemmapTokens.write_corpus(path, n_tokens=100_000, vocab=1000)
+    r0 = MemmapTokens(path, batch=2, seq=16, rank=0, world=2)
+    r1 = MemmapTokens(path, batch=2, seq=16, rank=1, world=2)
+    b0, b1 = next(r0), next(r1)
+    assert not np.array_equal(np.asarray(b0["tokens"]),
+                              np.asarray(b1["tokens"]))
+    # deterministic resume: a fresh reader starting at step 1 sees the same
+    # batch as the original reader's second step
+    b0_next = next(r0)
+    fresh = MemmapTokens(path, batch=2, seq=16, rank=0, world=2,
+                         start_step=1)
+    np.testing.assert_array_equal(np.asarray(next(fresh)["tokens"]),
+                                  np.asarray(b0_next["tokens"]))
+    # next-token alignment
+    np.testing.assert_array_equal(np.asarray(b0["tokens"][:, 1:]),
+                                  np.asarray(b0["labels"][:, :-1]))
+
+
+def test_global_norm():
+    tree = {"a": jnp.ones((3,)), "b": jnp.full((4,), 2.0)}
+    assert float(global_norm(tree)) == pytest.approx(np.sqrt(3 + 16))
