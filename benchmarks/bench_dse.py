@@ -1,33 +1,23 @@
 """Design-space exploration heat maps (paper §VI.C, Figs 10-17).
 
 4 workloads × (4 chips × 5 topologies × 4 mem/net combos = 80 systems),
-1024 accelerators each. Reports utilization, cost efficiency, power
-efficiency and the compute/memory/network breakdown, plus the paper's key
-observation ratios computed from our reproduction.
+1024 accelerators each, now driven through the parallel+cached
+``DSEEngine``. Reports utilization, cost efficiency, power efficiency, the
+compute/memory/network breakdown, the paper's key observation ratios, the
+Pareto frontier per workload family, and — the engine's contract — the
+wall-clock speedup of the parallel+cached path over the serial uncached
+baseline with bit-identical ``DesignPoint.row()`` output.
 """
 from __future__ import annotations
 
-from repro.core.dse import (DEFAULT_CHIPS, DEFAULT_MEM_NET,
-                            DEFAULT_TOPOLOGIES, sweep)
-from repro.workloads.dlrm import dlrm_workload
-from repro.workloads.fft import fft_workload
-from repro.workloads.hpl import hpl_workload
-from repro.workloads.llm import GPT3_1T, GPT3_175B, gpt_workload
+import time
+
+from repro.core import DSEEngine, caching_disabled, clear_caches, sweep
+from repro.workloads.scenarios import get_scenario, scenario_names
 
 from .common import geomean
 
 TITLE = "DSE heatmaps: GPT3-1T / DLRM-793B / HPL-5M² / FFT-1T on 80 systems"
-
-
-def _workloads(quick: bool):
-    # quick mode shrinks to 64 chips, where GPT3-1T cannot fit; use 175B
-    llm = GPT3_175B if quick else GPT3_1T
-    return {
-        "llm": lambda sys_: gpt_workload(llm, global_batch=512, microbatch=1),
-        "dlrm": lambda sys_: dlrm_workload(),
-        "hpl": lambda sys_: hpl_workload(),
-        "fft": lambda sys_: fft_workload(),
-    }
 
 
 def _ratio(points, pred_num, pred_den, metric):
@@ -91,21 +81,52 @@ def observations(name: str, pts) -> list[dict]:
     return rows
 
 
+def _frontier_rows(name: str, result) -> list[dict]:
+    return [{"workload": name, "pareto": True, **p.row()}
+            for p in result.frontier]
+
+
+def speedup_report(scenario_name: str = "llm", smoke: bool = True) -> dict:
+    """Serial uncached baseline vs parallel+cached engine, same grid.
+
+    The contract: ≥4× wall-clock on a multi-core host for the default
+    80-point sweep, with bit-identical ``DesignPoint.row()`` lists.
+    """
+    sc = get_scenario(scenario_name, smoke=smoke)
+    spec = sc.spec
+
+    clear_caches()
+    t0 = time.perf_counter()
+    with caching_disabled():
+        base = sweep(sc.work_fn, n_chips=spec.n_chips, chips=spec.chips,
+                     topologies=spec.topologies, mem_net=spec.mem_net,
+                     max_tp=spec.max_tp, max_pp=spec.max_pp,
+                     execution=spec.execution)
+    t_serial = time.perf_counter() - t0
+
+    clear_caches()
+    engine = DSEEngine()
+    t0 = time.perf_counter()
+    pts = engine.sweep(sc.work_fn, spec)
+    t_engine = time.perf_counter() - t0
+
+    identical = [p.row() for p in base] == [p.row() for p in pts]
+    return {"workload": scenario_name,
+            "grid_points": len(spec.grid()),
+            "serial_uncached_s": t_serial,
+            "engine_s": t_engine,
+            "speedup": t_serial / t_engine if t_engine else float("inf"),
+            "rows_identical": identical}
+
+
 def run(quick: bool = False):
-    n_chips = 64 if quick else 1024
-    chips = ("H100", "TPUv4", "SN30") if quick else DEFAULT_CHIPS
-    topos = ("torus2d", "dragonfly") if quick else DEFAULT_TOPOLOGIES
-    mem_net = (("DDR", "PCIe"), ("HBM", "NVLink")) if quick \
-        else DEFAULT_MEM_NET
+    engine = DSEEngine()
     out = []
-    for name, work_fn in _workloads(quick).items():
-        # HPL/FFT run one global problem instance (global_batch=1 ⇒ DP=1);
-        # the whole machine must be absorbed by TP (×PP), so TP is unbounded
-        max_tp = None if name in ("hpl", "fft") else 64
-        pts = sweep(work_fn, n_chips=n_chips, chips=chips,
-                    topologies=topos, mem_net=mem_net, max_tp=max_tp)
-        for p in pts:
-            out.append({"workload": name, **p.row()})
-        feas = [p for p in pts if p.plan.feasible]
-        out.extend(observations(name, feas or pts))
+    for name in scenario_names():
+        res = engine.sweep_scenario(name, smoke=quick)
+        out.extend(res.rows())
+        feas = [p for p in res.points if p.plan.feasible]
+        out.extend(observations(name, feas or res.points))
+        out.extend(_frontier_rows(name, res))
+    out.append(speedup_report("llm", smoke=quick))
     return out

@@ -4,6 +4,8 @@ Usage:
   PYTHONPATH=src python -m benchmarks.run             # full sweeps
   PYTHONPATH=src python -m benchmarks.run --quick     # reduced sweeps
   PYTHONPATH=src python -m benchmarks.run --only dse  # one module
+  PYTHONPATH=src python -m benchmarks.run --smoke     # CI gate: quick mode,
+                                                      # fast module subset
 
 Each module prints its rows as an aligned table plus one
 ``CSV,name,us_per_call,derived`` line for machine consumption.
@@ -32,13 +34,27 @@ MODULES = {
 }
 
 
+# the CI smoke gate: cheap enough for every PR, still exercises the solver
+# DPs and the full DSE engine path (parallel sweep + cache + Pareto)
+SMOKE_MODULES = ("solver", "dse")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: --quick grids, fast module subset")
     ap.add_argument("--only", choices=list(MODULES))
     args = ap.parse_args()
+    if args.smoke:
+        args.quick = True
 
-    names = [args.only] if args.only else list(MODULES)
+    if args.only:
+        names = [args.only]
+    elif args.smoke:
+        names = list(SMOKE_MODULES)
+    else:
+        names = list(MODULES)
     failures = []
     for name in names:
         mod = MODULES[name]

@@ -4,22 +4,21 @@
 interconnect and topology should we buy, for throughput / for cost
 efficiency / for power efficiency?"
 
+Runs through the parallel+cached ``DSEEngine`` scenario API: the smoke
+LLM scenario is exactly this question, and the Pareto frontier is the
+shortlist a system architect would actually take to procurement.
+
   PYTHONPATH=src python examples/dse_scenario.py
 """
-from repro.core.dse import sweep
-from repro.workloads.llm import GPT3_175B, gpt_workload
+from repro.core import DSEEngine
 
 
 def main():
-    pts = sweep(lambda sys_: gpt_workload(GPT3_175B, global_batch=512,
-                                          microbatch=1),
-                n_chips=64,
-                chips=("H100", "TPUv4", "SN30"),
-                topologies=("torus2d", "dragonfly", "dgx2"),
-                mem_net=(("DDR", "PCIe"), ("HBM", "NVLink")),
-                max_tp=64)
-    pts = [p for p in pts if p.plan.feasible]
-    print(f"{len(pts)} feasible design points\n")
+    engine = DSEEngine()
+    res = engine.sweep_scenario("llm", smoke=True)
+    pts = [p for p in res.points if p.plan.feasible] or res.points
+    print(f"{len(pts)} feasible design points "
+          f"({len(res.spec.grid())} grid cells swept)\n")
 
     for metric, label in [("utilization", "throughput utilization"),
                           ("cost_eff", "cost efficiency (FLOP/s/$)"),
@@ -34,6 +33,15 @@ def main():
               f"power={r['power_eff_gflops_per_w']:.1f} GFLOP/s/W")
         print(f"  latency split: compute {r['t_compute']:.0%} / "
               f"memory {r['t_memory']:.0%} / network {r['t_network']:.0%}\n")
+
+    print(f"Pareto frontier (utilization × cost eff × power eff): "
+          f"{len(res.frontier)} systems")
+    for p in res.frontier:
+        r = p.row()
+        print(f"  {r['chip']:6s} {r['memory']:4s} {r['link']:7s} "
+              f"{r['topology']:16s} util={r['utilization']:.3f} "
+              f"cost={r['cost_eff_gflops_per_usd']:.2f} "
+              f"power={r['power_eff_gflops_per_w']:.1f}")
 
 
 if __name__ == "__main__":

@@ -8,7 +8,9 @@ Public surface:
   intra-chip (§V)     : optimize_intra_chip, IntraChipResult
   solver              : minmax_partition, minsum_partition, branch_and_bound
   roofline (Fig 18)   : HierPoint, RooflineTerms
-  DSE (§VI.C)         : sweep, DesignPoint
+  DSE (§VI.C)         : sweep, DesignPoint, DSEEngine, SweepSpec,
+                        pareto_frontier (parallel+cached: dse_engine.py)
+  memo cache          : cache_stats, clear_caches, caching_disabled
   serving (§VIII)     : serving_sweep, speculative_throughput
   plan (runtime glue) : plan_for → MappingPlan consumed by repro.launch
 """
@@ -25,7 +27,11 @@ from .roofline import (HierPoint, RooflineTerms, V5E_HBM_BW, V5E_ICI_BW,
                        V5E_PEAK_FLOPS)
 from .costpower import (cost_efficiency, power_efficiency, silicon_power_w,
                         silicon_price_usd)
-from .dse import DesignPoint, sweep
+from .dse import DesignPoint, design_grid, sweep
+from .dse_engine import (DSEEngine, ScenarioResult, SweepSpec,
+                         pareto_frontier)
+from .memo import (CacheStats, SolveCache, cache_stats, caching_disabled,
+                   clear_caches)
 from .serving import (ServingPoint, SpecDecodePoint, expected_accepted,
                       serving_sweep, speculative_throughput)
 
@@ -43,7 +49,10 @@ __all__ = [
     "V5E_PEAK_FLOPS",
     "cost_efficiency", "power_efficiency", "silicon_power_w",
     "silicon_price_usd",
-    "DesignPoint", "sweep",
+    "DesignPoint", "design_grid", "sweep",
+    "DSEEngine", "ScenarioResult", "SweepSpec", "pareto_frontier",
+    "CacheStats", "SolveCache", "cache_stats", "caching_disabled",
+    "clear_caches",
     "ServingPoint", "SpecDecodePoint", "expected_accepted", "serving_sweep",
     "speculative_throughput",
 ]

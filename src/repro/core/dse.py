@@ -4,6 +4,42 @@ Sweeps accelerator × topology × memory × interconnect for a workload,
 running the full two-level optimization per design point and reporting
 utilization, cost efficiency, power efficiency, and the compute/memory/
 network latency breakdown.
+
+Engine API
+----------
+This module is the *serial reference path*: :func:`sweep` walks the design
+grid in order and prices one point at a time. The production engine lives in
+:mod:`repro.core.dse_engine`:
+
+* ``DSEEngine.sweep(work_fn, spec)`` — process-parallel evaluation of the
+  same grid with a deterministic ordered reduce: results are collected by
+  grid index, so the returned list is element-for-element identical
+  (including every float in ``DesignPoint.row()``) to this module's serial
+  sweep.
+* ``DSEEngine.sweep_scenario(name, smoke=...)`` — named sweeps over the four
+  workload families (``repro.workloads.scenarios``) plus Pareto-frontier
+  extraction over utilization × cost_eff × power_eff.
+
+Both paths share :func:`design_grid` / :func:`evaluate_design_point` below,
+which is what makes the parallel reduce deterministic by construction.
+
+Cache key contract
+------------------
+The expensive inner solves are memoised in ``repro.core.memo.GLOBAL_CACHE``
+under structural keys (see that module's docstring for the full contract):
+
+* ``"sharding"``: ``(layer_graph.fingerprint(), tp, tp_topo.dims, dims)``
+* ``"minmax"``  : ``(tuple(stage cost items), pp)``
+* ``"plan"``    : ``(work key, chip, n_chips, tp, pp, dp, dim structures,
+  execution)`` — memory-independent; the capacity check is re-applied per
+  memory variant.
+* ``"intra"``   : ``(scaled layer fingerprint, chip, mem, tuple(h_n),
+  tuple(h_m), mode)``
+
+Keys never involve object identity, so the cache hits across design points
+even though ``work_fn`` rebuilds the workload graph for every system, and a
+cached value is always computed from bit-identical inputs — cached and cold
+sweeps return identical results.
 """
 from __future__ import annotations
 
@@ -17,6 +53,7 @@ from ..systems.topology import TOPOLOGIES
 from .costpower import cost_efficiency, power_efficiency
 from .interchip import InterChipPlan, TrainWorkload, optimize_inter_chip
 from .intrachip import optimize_intra_chip
+from .memo import GLOBAL_CACHE
 
 
 @dataclasses.dataclass
@@ -48,6 +85,45 @@ DEFAULT_TOPOLOGIES = ("torus2d", "torus3d", "dragonfly", "dgx1", "dgx2")
 DEFAULT_MEM_NET = (("DDR", "PCIe"), ("DDR", "NVLink"),
                    ("HBM", "PCIe"), ("HBM", "NVLink"))
 
+#: One cell of the design grid: (chip, memory, interconnect, topology) names.
+GridCell = tuple[str, str, str, str]
+
+
+def design_grid(chips: Iterable[str] = DEFAULT_CHIPS,
+                mem_net: Iterable[tuple[str, str]] = DEFAULT_MEM_NET,
+                topologies: Iterable[str] = DEFAULT_TOPOLOGIES
+                ) -> list[GridCell]:
+    """The cartesian design grid in canonical (serial-sweep) order."""
+    return [(chip, mem, net, topo)
+            for chip in chips
+            for mem, net in mem_net
+            for topo in topologies]
+
+
+def build_system(cell: GridCell, n_chips: int) -> SystemSpec:
+    chip_name, mem_name, net_name, topo_name = cell
+    chip, mem = CHIPS[chip_name], MEMORIES[mem_name]
+    net = INTERCONNECTS[net_name]
+    topo = TOPOLOGIES[topo_name](n_chips, net)
+    return SystemSpec(f"{chip_name}-{mem_name}-{net_name}-{topo_name}",
+                      chip, mem, topo)
+
+
+def evaluate_design_point(work_fn: Callable[[SystemSpec], TrainWorkload],
+                          cell: GridCell, n_chips: int,
+                          max_tp: int | None = 64, max_pp: int | None = None,
+                          execution: str = "auto") -> DesignPoint | None:
+    """Price one grid cell; ``None`` marks an infeasible/undecomposable cell
+    (the sweep *skips* those rather than crashing)."""
+    system = build_system(cell, n_chips)
+    work = work_fn(system)
+    try:
+        plan = optimize_inter_chip(work, system, max_tp=max_tp,
+                                   max_pp=max_pp, execution=execution)
+    except ValueError:
+        return None
+    return _to_point(work, system, plan, execution)
+
 
 def sweep(work_fn: Callable[[SystemSpec], TrainWorkload],
           n_chips: int = 1024,
@@ -56,25 +132,15 @@ def sweep(work_fn: Callable[[SystemSpec], TrainWorkload],
           mem_net: Iterable[tuple[str, str]] = DEFAULT_MEM_NET,
           max_tp: int | None = 64, max_pp: int | None = None,
           execution: str = "auto") -> list[DesignPoint]:
-    """The 80-system cartesian sweep (4 chips × 5 topologies × 4 mem/net)."""
+    """The 80-system cartesian sweep (4 chips × 5 topologies × 4 mem/net),
+    evaluated serially in grid order (the reference for ``DSEEngine``)."""
     points: list[DesignPoint] = []
-    for chip_name in chips:
-        chip = CHIPS[chip_name]
-        for mem_name, net_name in mem_net:
-            mem, net = MEMORIES[mem_name], INTERCONNECTS[net_name]
-            for topo_name in topologies:
-                topo = TOPOLOGIES[topo_name](n_chips, net)
-                system = SystemSpec(
-                    f"{chip_name}-{mem_name}-{net_name}-{topo_name}",
-                    chip, mem, topo)
-                work = work_fn(system)
-                try:
-                    plan = optimize_inter_chip(work, system, max_tp=max_tp,
-                                               max_pp=max_pp,
-                                               execution=execution)
-                except ValueError:
-                    continue
-                points.append(_to_point(work, system, plan, execution))
+    for cell in design_grid(chips, mem_net, topologies):
+        point = evaluate_design_point(work_fn, cell, n_chips,
+                                      max_tp=max_tp, max_pp=max_pp,
+                                      execution=execution)
+        if point is not None:
+            points.append(point)
     return points
 
 
@@ -90,9 +156,13 @@ def _to_point(work: TrainWorkload, system: SystemSpec, plan: InterChipPlan,
         mode = execution
     layer = work.layer_graph.scaled(
         flop_scale=1.0 / plan.tp, bytes_scale=1.0 / plan.tp)
-    intra = optimize_intra_chip(layer, system.chip, system.memory,
-                                h_n=plan.sharding.h_n, h_m=plan.sharding.h_m,
-                                mode=mode)
+    key = (layer.fingerprint(), system.chip, system.memory,
+           tuple(plan.sharding.h_n), tuple(plan.sharding.h_m), mode)
+    intra = GLOBAL_CACHE.get_or_compute(
+        "intra", key,
+        lambda: optimize_intra_chip(layer, system.chip, system.memory,
+                                    h_n=plan.sharding.h_n,
+                                    h_m=plan.sharding.h_m, mode=mode))
     total = intra.t_comp.sum() + intra.t_mem.sum() + intra.t_net.sum()
     util = plan.utilization
     # memory-bound refinement: if intra-chip memory time dominates the

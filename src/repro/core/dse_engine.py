@@ -1,0 +1,285 @@
+"""DSEEngine — process-parallel, memoised design-space sweeps (§VI.C at scale).
+
+The engine evaluates the same design grid as the serial reference
+:func:`repro.core.dse.sweep`, but
+
+* **in parallel**: design points are independent, so they are priced by a
+  ``concurrent.futures`` process pool. Results are reduced *by grid index*
+  (a deterministic ordered reduce), so the output list — including every
+  float in ``DesignPoint.row()`` — is identical to the serial sweep's,
+  regardless of worker count or completion order.
+* **cached**: the inner solves (TP sharding, PP min-max partition, the
+  memory-independent inter-chip plan, the intra-chip pass) are memoised in
+  ``repro.core.memo`` under structural keys. Submission order groups the
+  memory variants of each (chip, net, topology) into the same worker chunk
+  so the plan-level cache hits inside each worker; workers forked after a
+  warm-up also inherit the parent's cache.
+* **scenario-first**: :meth:`DSEEngine.sweep_scenario` runs the named
+  sweeps over the four workload families (LLM / DLRM / HPL / FFT, see
+  :mod:`repro.workloads.scenarios`) and extracts the Pareto frontier over
+  ``utilization × cost_eff × power_eff`` — the decision surface the paper's
+  heat maps (Figs 10-17) visualize.
+
+``benchmarks/bench_dse.py`` measures the engine against the serial uncached
+baseline and asserts row-identical output; ``examples/dse_scenario.py``
+shows the scenario/Pareto API.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import multiprocessing
+import os
+import pickle
+import sys
+import warnings
+from typing import Callable, Iterable, Sequence
+
+from ..systems.system import SystemSpec
+from .dse import (DEFAULT_CHIPS, DEFAULT_MEM_NET, DEFAULT_TOPOLOGIES,
+                  DesignPoint, design_grid, evaluate_design_point)
+from .interchip import TrainWorkload
+from .memo import GLOBAL_CACHE, caching_disabled
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """Immutable description of one design-grid sweep."""
+
+    n_chips: int = 1024
+    chips: tuple[str, ...] = DEFAULT_CHIPS
+    topologies: tuple[str, ...] = DEFAULT_TOPOLOGIES
+    mem_net: tuple[tuple[str, str], ...] = DEFAULT_MEM_NET
+    max_tp: int | None = 64
+    max_pp: int | None = None
+    execution: str = "auto"
+
+    def grid(self) -> list[tuple[str, str, str, str]]:
+        return design_grid(self.chips, self.mem_net, self.topologies)
+
+
+@dataclasses.dataclass
+class ScenarioResult:
+    """Points + Pareto frontier for one named workload scenario."""
+
+    name: str
+    smoke: bool
+    spec: SweepSpec
+    points: list[DesignPoint]
+    frontier: list[DesignPoint]
+
+    def rows(self) -> list[dict]:
+        return [{"workload": self.name, **p.row()} for p in self.points]
+
+
+def pareto_frontier(points: Sequence[DesignPoint],
+                    metrics: tuple[str, ...] = ("utilization", "cost_eff",
+                                                "power_eff"),
+                    feasible_only: bool | str = "auto"
+                    ) -> list[DesignPoint]:
+    """Non-dominated subset of ``points`` maximizing every metric.
+
+    A point is dominated if some other point is ≥ on every metric and
+    strictly better on at least one. ``feasible_only="auto"`` restricts to
+    memory-feasible points when any exist (the paper's heat maps grey out
+    infeasible systems) and falls back to the full set otherwise, so the
+    frontier of a non-empty sweep is never empty.
+    """
+    pts = list(points)
+    if feasible_only == "auto":
+        feas = [p for p in pts if p.plan.feasible]
+        pts = feas or pts
+    elif feasible_only:
+        pts = [p for p in pts if p.plan.feasible]
+    vals = [tuple(getattr(p, m) for m in metrics) for p in pts]
+    out = []
+    for i, vi in enumerate(vals):
+        dominated = any(
+            vj != vi and all(vj[k] >= vi[k] for k in range(len(vi)))
+            for j, vj in enumerate(vals) if j != i)
+        if not dominated:
+            out.append(pts[i])
+    return out
+
+
+# --- worker plumbing ---------------------------------------------------------
+# Two transports:
+#   fork  — the work_fn closure (often a lambda) cannot be pickled, so the
+#           parent parks the sweep context in a module global, forks the
+#           pool, and ships only grid *indices* to workers.
+#   spawn — used when forking is unsafe (jax already imported: forking a
+#           multithreaded process is a documented deadlock risk). Requires a
+#           picklable work_fn (the scenario registry's builders all are);
+#           each task carries its full arguments.
+_WORKER_CTX: dict = {}
+
+
+def _eval_index(i: int) -> DesignPoint | None:
+    ctx = _WORKER_CTX
+    return evaluate_design_point(ctx["work_fn"], ctx["grid"][i],
+                                 ctx["n_chips"], max_tp=ctx["max_tp"],
+                                 max_pp=ctx["max_pp"],
+                                 execution=ctx["execution"])
+
+
+def _eval_args(args: tuple) -> DesignPoint | None:
+    work_fn, cell, n_chips, max_tp, max_pp, execution = args
+    return evaluate_design_point(work_fn, cell, n_chips, max_tp=max_tp,
+                                 max_pp=max_pp, execution=execution)
+
+
+#: Infrastructure failures that justify a silent-ish serial fallback (the
+#: fallback is warned about). Anything else — e.g. a work_fn bug — must
+#: propagate with its real traceback, not be retried serially.
+def _pool_infra_errors() -> tuple[type[BaseException], ...]:
+    from concurrent.futures.process import BrokenProcessPool
+
+    return (OSError, BrokenProcessPool, pickle.PicklingError)
+
+
+class DSEEngine:
+    """Parallel + cached design-space sweep engine.
+
+    Parameters
+    ----------
+    max_workers:
+        Process count for the parallel path (default: CPU count).
+    parallel:
+        ``"auto"`` (parallel when >1 CPU and the grid is big enough),
+        ``True`` (force), or ``False`` (serial in-process, still cached).
+    use_cache:
+        ``False`` runs every solve cold — the serial-baseline mode of
+        ``benchmarks/bench_dse.py``. (Fork workers inherit the disabled
+        flag; spawn workers start fresh either way.)
+    """
+
+    def __init__(self, max_workers: int | None = None,
+                 parallel: bool | str = "auto",
+                 use_cache: bool = True) -> None:
+        self.max_workers = max_workers or (os.cpu_count() or 1)
+        self.parallel = parallel
+        self.use_cache = use_cache
+
+    # -- core sweep ----------------------------------------------------------
+    def sweep(self, work_fn: Callable[[SystemSpec], TrainWorkload],
+              spec: SweepSpec = SweepSpec()) -> list[DesignPoint]:
+        """Price every grid cell of ``spec``; skip infeasible cells.
+
+        Output order and values are identical to
+        ``repro.core.dse.sweep(work_fn, **spec fields)``.
+        """
+        grid = spec.grid()
+        results = None
+        if self._should_parallelize(len(grid)):
+            try:
+                results = self._parallel_eval(work_fn, spec, grid)
+            except _pool_infra_errors() as exc:
+                # pool infrastructure failed (no start method, worker died,
+                # unpicklable work_fn under spawn) — the sweep itself is
+                # still fine serially. work_fn errors are NOT caught: they
+                # propagate with their real traceback.
+                warnings.warn(f"parallel sweep unavailable ({exc!r}); "
+                              f"falling back to serial", RuntimeWarning,
+                              stacklevel=2)
+        if results is None:
+            results = self._serial_eval(work_fn, spec, grid)
+        return [p for p in results if p is not None]
+
+    def sweep_scenario(self, name: str, smoke: bool = False
+                       ) -> ScenarioResult:
+        """Run a named workload-family sweep + Pareto extraction."""
+        from ..workloads.scenarios import get_scenario
+
+        sc = get_scenario(name, smoke=smoke)
+        points = self.sweep(sc.work_fn, sc.spec)
+        return ScenarioResult(name=sc.name, smoke=smoke, spec=sc.spec,
+                              points=points,
+                              frontier=pareto_frontier(points))
+
+    def sweep_all_scenarios(self, smoke: bool = False,
+                            names: Iterable[str] | None = None
+                            ) -> dict[str, ScenarioResult]:
+        from ..workloads.scenarios import scenario_names
+
+        return {n: self.sweep_scenario(n, smoke=smoke)
+                for n in (names or scenario_names())}
+
+    # -- internals -----------------------------------------------------------
+    def _should_parallelize(self, grid_size: int) -> bool:
+        if self.parallel is False:
+            return False
+        if self.parallel is True:
+            return self.max_workers > 1
+        return self.max_workers > 1 and grid_size >= 4
+
+    @staticmethod
+    def _start_method() -> str:
+        """Pick the pool transport.
+
+        Forking a multithreaded process is a documented deadlock risk, and
+        importing jax starts worker threads — so once jax is loaded (the
+        kernel test suite, a training session) we use spawn, which needs a
+        picklable work_fn. Otherwise fork, which supports closures.
+        """
+        methods = multiprocessing.get_all_start_methods()
+        if "fork" in methods and "jax" not in sys.modules:
+            return "fork"
+        return "spawn"
+
+    def _serial_eval(self, work_fn, spec: SweepSpec, grid):
+        with self._cache_mode():
+            return [evaluate_design_point(work_fn, cell, spec.n_chips,
+                                          max_tp=spec.max_tp,
+                                          max_pp=spec.max_pp,
+                                          execution=spec.execution)
+                    for cell in grid]
+
+    def _parallel_eval(self, work_fn, spec: SweepSpec, grid):
+        import concurrent.futures as cf
+
+        # Submission order: group the memory variants of each
+        # (chip, net, topology) so they land in one worker chunk and share
+        # the memory-independent plan solve. The reduce below restores grid
+        # order exactly, so submission order never affects the result.
+        order = sorted(range(len(grid)),
+                       key=lambda i: (grid[i][0], grid[i][2], grid[i][3],
+                                      grid[i][1]))
+        group = max(1, len(grid) //
+                    max(1, len({(c, n, t) for c, _m, n, t in grid})))
+        workers = min(self.max_workers, len(grid))
+        per_worker = math.ceil(len(grid) / workers)
+        # keep chunks small enough that every worker gets work
+        chunk = min(max(group, 1), max(1, per_worker))
+        method = self._start_method()
+        ctx = multiprocessing.get_context(method)
+
+        if method == "spawn":
+            # spawn ships full task args — requires a picklable work_fn;
+            # an unpicklable one is an infra error → serial fallback
+            pickle.dumps(work_fn)
+            tasks = [(work_fn, grid[i], spec.n_chips, spec.max_tp,
+                      spec.max_pp, spec.execution) for i in order]
+            fn, payload = _eval_args, tasks
+        else:
+            _WORKER_CTX.update(work_fn=work_fn, grid=grid,
+                               n_chips=spec.n_chips, max_tp=spec.max_tp,
+                               max_pp=spec.max_pp, execution=spec.execution)
+            fn, payload = _eval_index, order
+        try:
+            with self._cache_mode():
+                with cf.ProcessPoolExecutor(max_workers=workers,
+                                            mp_context=ctx) as pool:
+                    mapped = pool.map(fn, payload, chunksize=chunk)
+                    out: list[DesignPoint | None] = [None] * len(grid)
+                    for j, point in zip(order, mapped):
+                        out[j] = point
+                    return out
+        finally:
+            _WORKER_CTX.clear()
+
+    def _cache_mode(self):
+        if self.use_cache:
+            import contextlib
+
+            return contextlib.nullcontext()
+        return caching_disabled()

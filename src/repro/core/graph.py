@@ -80,6 +80,7 @@ class DataflowGraph:
             if t.src == t.dst:
                 raise ValueError(f"tensor {t.name}: self-loop")
         self._topo = self._toposort()  # raises on cycles
+        self._fingerprint: str | None = None
 
     # -- structure ---------------------------------------------------------
     @property
@@ -139,6 +140,27 @@ class DataflowGraph:
 
     def topo_names(self) -> list[str]:
         return [self.kernels[i].name for i in self._topo]
+
+    def fingerprint(self) -> str:
+        """Structural content digest (kernels + tensors, order-sensitive).
+
+        Two graphs with equal fingerprints are byte-for-byte the same
+        workload, so solver results computed on one are valid for the other.
+        This is the graph identity used by the ``repro.core.memo`` cache keys
+        — unlike ``id()``, it survives rebuilding the graph object, which the
+        DSE sweep does once per design point.
+        """
+        if self._fingerprint is None:
+            import hashlib
+
+            h = hashlib.blake2b(digest_size=16)
+            for k in self.kernels:
+                h.update(repr((k.name, k.flops, k.kind.value, k.weight_bytes,
+                               k.gemm_dims)).encode())
+            for t in self.tensors:
+                h.update(repr((t.name, t.src, t.dst, t.bytes_)).encode())
+            self._fingerprint = h.hexdigest()
+        return self._fingerprint
 
     # -- aggregate quantities ------------------------------------------------
     def total_flops(self) -> float:

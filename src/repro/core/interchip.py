@@ -23,9 +23,11 @@ from typing import Sequence
 
 import numpy as np
 
+from ..systems.chips import ChipSpec
 from ..systems.system import SystemSpec
 from ..systems.topology import Topology, TopologyDim
 from .graph import DataflowGraph
+from .memo import GLOBAL_CACHE
 from .sharding import ShardingSolution, solve_sharding
 from .solver import enumerate_parallelism, minmax_partition
 from .utilization import kernel_utilization
@@ -156,31 +158,63 @@ def _subdivide_dims(topology: Topology, degrees: tuple[int, int, int],
     return uniq
 
 
-# sharding solutions are pure functions of (graph, tp, topo-structure);
-# the (tp, pp, dp) sweep revisits the same key hundreds of times
-_SHARD_CACHE: dict = {}
-
-
+# sharding solutions are pure functions of (graph content, tp,
+# topo-structure); the (tp, pp, dp) sweep revisits the same key hundreds of
+# times, and the DSE sweep rebuilds identical graphs once per system — the
+# structural fingerprint key hits across both.
 def _cached_sharding(graph: DataflowGraph, tp: int, topo: Topology,
                      dims) -> ShardingSolution:
-    key = (id(graph), graph.name, tp,
-           tuple((d.size, d.kind, d.link.name, d.link.bandwidth)
-                 for d in topo.dims))
-    sol = _SHARD_CACHE.get(key)
-    if sol is None:
-        sol = solve_sharding(graph, tp, topo, dims)
-        if len(_SHARD_CACHE) > 4096:
-            _SHARD_CACHE.clear()
-        _SHARD_CACHE[key] = sol
-    return sol
+    key = (graph.fingerprint(), tp, topo.dims, tuple(dims))
+    return GLOBAL_CACHE.get_or_compute(
+        "sharding", key, lambda: solve_sharding(graph, tp, topo, dims))
+
+
+def _cached_minmax(items: list[float], p: int) -> list[int]:
+    """PP stage partition, memoised on the exact cost vector."""
+    key = (tuple(items), p)
+    return list(GLOBAL_CACHE.get_or_compute(
+        "minmax", key, lambda: tuple(minmax_partition(items, p)[0])))
+
+
+def _work_key(work: TrainWorkload) -> tuple:
+    """Structural identity of a workload (cache-key component)."""
+    return (work.layer_graph.fingerprint(),
+            work.pre_graph.fingerprint() if work.pre_graph else None,
+            work.post_graph.fingerprint() if work.post_graph else None,
+            work.n_layers, work.global_batch, work.microbatch,
+            work.bwd_flop_mult, work.bwd_comm_mult,
+            work.optimizer_bytes_per_param_byte)
 
 
 def evaluate_plan(work: TrainWorkload, system: SystemSpec,
                   tp: int, pp: int, dp: int,
                   tp_topo: Topology, pp_topo: Topology, dp_topo: Topology,
                   execution: str = "dataflow") -> InterChipPlan | None:
-    """Price one (tp, pp, dp, dim-assignment) point."""
-    chip = system.chip
+    """Price one (tp, pp, dp, dim-assignment) point.
+
+    Everything except the final memory-capacity check is independent of the
+    system's memory part, so the priced plan is memoised on
+    (workload, chip, n_chips, degrees, dim structures) and only the
+    ``feasible`` flag is recomputed per memory variant — the DSE grid pairs
+    each (chip, net, topology) with several memories, all of which share one
+    solve.
+    """
+    key = (_work_key(work), system.chip, system.n_chips, tp, pp, dp,
+           tp_topo.dims, pp_topo.dims, dp_topo.dims, execution)
+    plan = GLOBAL_CACHE.get_or_compute(
+        "plan", key,
+        lambda: _price_plan(work, system.chip, system.n_chips, tp, pp, dp,
+                            tp_topo, pp_topo, dp_topo))
+    if plan is None:
+        return None
+    return dataclasses.replace(
+        plan, feasible=plan.per_chip_mem_bytes <= system.memory.capacity)
+
+
+def _price_plan(work: TrainWorkload, chip: ChipSpec, n_chips: int,
+                tp: int, pp: int, dp: int,
+                tp_topo: Topology, pp_topo: Topology,
+                dp_topo: Topology) -> InterChipPlan | None:
     peak = chip.peak_flops
     tdims = list(range(len(tp_topo.dims)))
 
@@ -212,7 +246,7 @@ def evaluate_plan(work: TrainWorkload, system: SystemSpec,
     items_comp = [pre[0]] + [t_comp_layer] * work.n_layers + [post[0]]
     items_net = [pre[1]] + [t_net_layer] * work.n_layers + [post[1]]
     items = [max(c, nn) for c, nn in zip(items_comp, items_net)]
-    bounds, _ = minmax_partition(items, pp)
+    bounds = _cached_minmax(items, pp)
 
     # boundary activation bytes (largest tensor leaving a layer), sharded by tp
     boundary_b = max((t.bytes_ for t in work.layer_graph.tensors),
@@ -251,7 +285,7 @@ def evaluate_plan(work: TrainWorkload, system: SystemSpec,
 
     model_flops = (work.total_fwd_flops_per_seq()
                    * (1.0 + work.bwd_flop_mult) * work.global_batch)
-    util = model_flops / (iter_time * system.n_chips * peak)
+    util = model_flops / (iter_time * n_chips * peak)
 
     # --- per-chip memory -----------------------------------------------------
     w_bytes = work.total_weight_bytes() / (tp * pp)
@@ -260,7 +294,9 @@ def evaluate_plan(work: TrainWorkload, system: SystemSpec,
     layers_per_stage = math.ceil(work.n_layers / pp)
     act_bytes = act_per_layer * layers_per_stage * min(n_micro, pp)
     mem = w_bytes + opt_bytes + act_bytes
-    feasible = mem <= system.memory.capacity
+    # the capacity check is the caller's job (evaluate_plan replaces this
+    # flag per memory variant); the cached plan itself is memory-agnostic
+    feasible = False
 
     return InterChipPlan(
         tp=tp, pp=pp, dp=dp, sharding=shard, stage_bounds=bounds,

@@ -27,7 +27,10 @@ DFModel by recovering exactly that (4 all-reduces / layer / iteration, §VI.A).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Sequence
+
+import numpy as np
 
 from ..systems.topology import Topology
 from .graph import DataflowGraph, Kernel, KernelKind
@@ -57,6 +60,40 @@ def _zero(_b: float, _t: Topology, _d: Sequence[int]) -> float:
     return 0.0
 
 
+# Scheme collective/payload callables are module-level functions (closures
+# over the TP degree go through functools.partial) so Scheme — and with it
+# ShardingSolution, InterChipPlan and DesignPoint — pickles cleanly across
+# the DSEEngine worker-process boundary.
+def _comm_all_reduce(b: float, topo: Topology, dims: Sequence[int]) -> float:
+    return topo.all_reduce(b, dims)
+
+
+def _comm_reduce_scatter(b: float, topo: Topology,
+                         dims: Sequence[int]) -> float:
+    return topo.reduce_scatter(b, dims)
+
+
+def _comm_all_to_all(b: float, topo: Topology, dims: Sequence[int]) -> float:
+    return topo.all_to_all(b, dims)
+
+
+def _comm_all_to_all_2x(b: float, topo: Topology,
+                        dims: Sequence[int]) -> float:
+    return 2.0 * topo.all_to_all(b, dims)
+
+
+def _bytes_zero(b: float) -> float:
+    return 0.0
+
+
+def _bytes_all_reduce(b: float, t: int = 2) -> float:
+    return 2.0 * b * (t - 1) / t
+
+
+def _bytes_shard(b: float, t: int = 2) -> float:
+    return b * (t - 1) / t
+
+
 def schemes_for(kernel: Kernel, t: int, seq_shardable: bool = False,
                 expert_region: bool = False) -> list[Scheme]:
     """Sharding schemes available to ``kernel`` on a TP group of size ``t``.
@@ -72,71 +109,64 @@ def schemes_for(kernel: Kernel, t: int, seq_shardable: bool = False,
     ``t`` == 1 collapses everything to a single no-op scheme.
     """
     if t <= 1:
-        return [Scheme("solo", "R", "R", 1.0, 1.0, _zero, lambda b: 0.0)]
+        return [Scheme("solo", "R", "R", 1.0, 1.0, _zero, _bytes_zero)]
 
     inv = 1.0 / t
-    ar = lambda b, topo, dims: topo.all_reduce(b, dims)
-    rs = lambda b, topo, dims: topo.reduce_scatter(b, dims)
-    a2a = lambda b, topo, dims: topo.all_to_all(b, dims)
+    ar, rs, a2a = _comm_all_reduce, _comm_reduce_scatter, _comm_all_to_all
+    ar_bytes = functools.partial(_bytes_all_reduce, t=t)
+    shard_bytes = functools.partial(_bytes_shard, t=t)
 
     k = kernel.kind
     out: list[Scheme] = []
     if k == KernelKind.GEMM and expert_region:
         # expert-parallel GEMM: tokens already dispatched (M layout), expert
         # weights sharded, combine priced at the router.
-        return [Scheme("expert_mm", "M", "M", inv, inv, _zero, lambda b: 0.0),
-                Scheme("expert_mr", "M", "R", inv, inv, _zero, lambda b: 0.0)]
+        return [Scheme("expert_mm", "M", "M", inv, inv, _zero, _bytes_zero),
+                Scheme("expert_mr", "M", "R", inv, inv, _zero, _bytes_zero)]
     if k == KernelKind.GEMM:
         # Fig 4 scheme A/B analogues + Megatron col/row pair.
-        out.append(Scheme("col", "R", "N", inv, inv, _zero, lambda b: 0.0))
-        out.append(Scheme("row_ar", "N", "R", inv, inv, ar,
-                          lambda b: 2.0 * b * (t - 1) / t))
+        out.append(Scheme("col", "R", "N", inv, inv, _zero, _bytes_zero))
+        out.append(Scheme("row_ar", "N", "R", inv, inv, ar, ar_bytes))
         # beyond-paper: Megatron-SP style reduce-scatter epilogue (output M)
-        out.append(Scheme("row_rs", "N", "M", inv, inv, rs,
-                          lambda b: b * (t - 1) / t))
+        out.append(Scheme("row_rs", "N", "M", inv, inv, rs, shard_bytes))
         if seq_shardable:
-            out.append(Scheme("data", "M", "M", inv, 1.0, _zero, lambda b: 0.0))
+            out.append(Scheme("data", "M", "M", inv, 1.0, _zero, _bytes_zero))
     elif k == KernelKind.ATTENTION:
         # head-sharded attention: inputs/outputs live in N (head) layout
-        out.append(Scheme("head", "N", "N", inv, inv, _zero, lambda b: 0.0))
+        out.append(Scheme("head", "N", "N", inv, inv, _zero, _bytes_zero))
         if seq_shardable:
-            out.append(Scheme("seq", "M", "M", inv, 1.0, _zero, lambda b: 0.0))
+            out.append(Scheme("seq", "M", "M", inv, 1.0, _zero, _bytes_zero))
     elif k in (KernelKind.SOFTMAX, KernelKind.NORM, KernelKind.ELEMENTWISE):
         for lay in ("M", "N") if seq_shardable else ("N",):
             out.append(Scheme(f"ew_{lay}", lay, lay, inv, 1.0, _zero,
-                              lambda b: 0.0))
-        out.append(Scheme("ew_R", "R", "R", 1.0, 1.0, _zero, lambda b: 0.0))
+                              _bytes_zero))
+        out.append(Scheme("ew_R", "R", "R", 1.0, 1.0, _zero, _bytes_zero))
     elif k == KernelKind.EMBEDDING:
         # vocab-sharded table: each chip gathers its hits, partial rows → AR
-        out.append(Scheme("vocab_ar", "R", "R", inv, inv, ar,
-                          lambda b: 2.0 * b * (t - 1) / t))
+        out.append(Scheme("vocab_ar", "R", "R", inv, inv, ar, ar_bytes))
         out.append(Scheme("replicated", "M", "M", inv, 1.0, _zero,
-                          lambda b: 0.0))
+                          _bytes_zero))
     elif k == KernelKind.ROUTER:
         # MoE dispatch+combine: tokens cross the EP group twice (a2a each
         # way); both directions are priced here on the dispatched tensor,
         # so downstream expert GEMMs are comm-free ('expert' schemes).
-        out.append(Scheme("ep_a2a", "R", "M", inv, inv,
-                          lambda b, topo, dims: 2.0 * a2a(b, topo, dims),
-                          lambda b: 2.0 * b * (t - 1) / t,
-                          price_on_full=True))
+        out.append(Scheme("ep_a2a", "R", "M", inv, inv, _comm_all_to_all_2x,
+                          ar_bytes, price_on_full=True))
     elif k == KernelKind.SCAN:
         # SSM: shard inner channels/heads; recurrence is along seq (local)
-        out.append(Scheme("chan", "N", "N", inv, inv, _zero, lambda b: 0.0))
+        out.append(Scheme("chan", "N", "N", inv, inv, _zero, _bytes_zero))
         if seq_shardable:
-            out.append(Scheme("data", "M", "M", inv, 1.0, _zero, lambda b: 0.0))
+            out.append(Scheme("data", "M", "M", inv, 1.0, _zero, _bytes_zero))
     elif k == KernelKind.FFT:
         # distributed FFT stage: local FFTs on pencils; the transpose between
         # stages is the conversion (M<->N all-to-all) or an explicit COMM node
-        out.append(Scheme("pencil_m", "M", "M", inv, 1.0, _zero,
-                          lambda b: 0.0))
-        out.append(Scheme("pencil_n", "N", "N", inv, 1.0, _zero,
-                          lambda b: 0.0))
+        out.append(Scheme("pencil_m", "M", "M", inv, 1.0, _zero, _bytes_zero))
+        out.append(Scheme("pencil_n", "N", "N", inv, 1.0, _zero, _bytes_zero))
     elif k == KernelKind.COMM:
         out.append(Scheme("a2a", "M", "M", 1.0, 1.0, a2a,
-                          lambda b: b * (t - 1) / t, price_on_full=True))
+                          shard_bytes, price_on_full=True))
     if not out:
-        out.append(Scheme("rep", "R", "R", 1.0, 1.0, _zero, lambda b: 0.0))
+        out.append(Scheme("rep", "R", "R", 1.0, 1.0, _zero, _bytes_zero))
     return out
 
 
@@ -213,49 +243,78 @@ def solve_sharding(graph: DataflowGraph, t: int, topo: Topology,
     edges = [(graph.kernel_index(tn.src), graph.kernel_index(tn.dst), tn.bytes_)
              for tn in graph.tensors]
 
+    sizes = [len(c) for c in cand]
+    out_bytes = [sum(tt.bytes_ for tt in graph.out_tensors(k.name))
+                 for k in graph.kernels]
+
     def _priced_bytes(i: int, s: Scheme) -> float:
-        out_b = sum(tt.bytes_ for tt in graph.out_tensors(graph.kernels[i].name))
+        out_b = out_bytes[i]
         if s.price_on_full or s.out_layout == "R":
             return out_b
         return out_b / t
 
-    def kernel_cost(i: int, si: int) -> float:
-        s = cand[i][si]
-        return s.comm(_priced_bytes(i, s), topo, dims)
+    # Cost tables: kernel_cost is pure in (i, scheme), edge_cost in
+    # (edge, scheme, scheme) — the search loops below (exhaustive product,
+    # greedy, Viterbi, ICM) revisit each entry thousands of times, so both
+    # are materialized once up front.
+    kc = [np.array([cand[i][si].comm(_priced_bytes(i, cand[i][si]),
+                                     topo, dims)
+                    for si in range(sizes[i])]) for i in range(n)]
+    ec = [np.array([[conversion_cost(cand[i][si].out_layout,
+                                     cand[j][sj].in_layout,
+                                     b, topo, dims, t)
+                     for sj in range(sizes[j])] for si in range(sizes[i])])
+          for (i, j, b) in edges]
+    in_edges: list[list[tuple[int, int]]] = [[] for _ in range(n)]
+    out_edges: list[list[tuple[int, int]]] = [[] for _ in range(n)]
+    for ei, (i, j, _b) in enumerate(edges):
+        in_edges[j].append((ei, i))
+        out_edges[i].append((ei, j))
 
-    def edge_cost(e: tuple[int, int, float], si: int, sj: int) -> float:
-        i, j, b = e   # b is the global tensor size — collectives expect global
-        return conversion_cost(cand[i][si].out_layout, cand[j][sj].in_layout,
-                               b, topo, dims, t)
+    def kernel_cost(i: int, si: int) -> float:
+        return float(kc[i][si])
 
     def total(assign: list[int]) -> float:
         c = sum(kernel_cost(i, assign[i]) for i in range(n))
-        c += sum(edge_cost(e, assign[e[0]], assign[e[1]]) for e in edges)
+        c += sum(float(ec[ei][assign[i], assign[j]])
+                 for ei, (i, j, _b) in enumerate(edges))
         return c
 
-    sizes = [len(c) for c in cand]
     space = 1
     for z in sizes:
         space *= z
         if space > 4 ** exhaustive_limit:
             break
-    def conv_total(assign: list[int]) -> float:
-        return sum(edge_cost(e, assign[e[0]], assign[e[1]]) for e in edges)
 
     best: list[int]
     if space <= 4 ** exhaustive_limit and n <= exhaustive_limit:
-        import itertools
         # tie-break toward inherent collectives over layout conversions:
         # a conversion is a serial resynchronization on the tensor's critical
         # path, while a kernel's inherent collective overlaps with its epilogue
         # (this recovers the canonical Megatron pattern among equal-cost
         # assignments — the paper's §VI.A validation).
+        #
+        # Enumeration is vectorized over chunks of the scheme product space
+        # in itertools.product order, accumulating kernel then edge terms in
+        # the same order as ``total`` so the selected assignment (including
+        # first-occurrence tie-breaks) matches the scalar scan exactly.
         best, best_key = None, (float("inf"), float("inf"))
-        for combo in itertools.product(*(range(z) for z in sizes)):
-            combo = list(combo)
-            key = (total(combo), conv_total(combo))
+        CHUNK = 1 << 16
+        for lo in range(0, space, CHUNK):
+            hi = min(space, lo + CHUNK)
+            combos = np.array(np.unravel_index(np.arange(lo, hi), sizes))
+            ksum = np.zeros(hi - lo)
+            for i in range(n):
+                ksum += kc[i][combos[i]]
+            esum = np.zeros(hi - lo)
+            for ei, (i, j, _b) in enumerate(edges):
+                esum += ec[ei][combos[i], combos[j]]
+            tot = ksum + esum
+            cand_idx = np.nonzero(tot == tot.min())[0]
+            ci = int(cand_idx[int(np.argmin(esum[cand_idx]))])
+            key = (float(tot[ci]), float(esum[ci]))
             if key < best_key:
-                best_key, best = key, combo
+                best_key, best = key, [int(x) for x in combos[:, ci]]
     else:
         # Viterbi DP seed over the topo chain (exact for pure chains), then
         # multi-restart ICM sweeps (handles skip edges) — DESIGN.md §5.
@@ -263,9 +322,9 @@ def solve_sharding(graph: DataflowGraph, t: int, topo: Topology,
             """Exact on chains: DP over the topo order, scoring each node's
             scheme against its first predecessor's edge only."""
             order = graph.topo_order
-            prev_of: dict[int, tuple] = {}
-            for e in edges:            # one representative in-edge per node
-                prev_of.setdefault(e[1], e)
+            prev_of: dict[int, tuple[int, tuple[int, int, float]]] = {}
+            for ei, e in enumerate(edges):  # one representative in-edge/node
+                prev_of.setdefault(e[1], (ei, e))
             dp: dict[int, list[float]] = {}
             back: dict[int, list[int]] = {}
             for i in order:
@@ -275,8 +334,9 @@ def solve_sharding(graph: DataflowGraph, t: int, topo: Topology,
                 for si in range(sizes[i]):
                     c = kernel_cost(i, si)
                     if e_in is not None:
-                        p = e_in[0]
-                        opts = [dp[p][sp] + edge_cost(e_in, sp, si)
+                        ei, e = e_in
+                        p = e[0]
+                        opts = [dp[p][sp] + float(ec[ei][sp, si])
                                 for sp in range(sizes[p])]
                         bp = int(min(range(len(opts)), key=opts.__getitem__))
                         c += opts[bp]
@@ -284,15 +344,14 @@ def solve_sharding(graph: DataflowGraph, t: int, topo: Topology,
                     dp[i][si] = c
             out = [0] * n
             for i in reversed(order):
-                e_in = prev_of.get(i)
                 # choose the terminal node's best; propagate back pointers
-                if not any(e[0] == i for e in edges):
+                if not out_edges[i]:
                     out[i] = int(min(range(sizes[i]),
                                      key=dp[i].__getitem__))
             for i in reversed(order):
                 e_in = prev_of.get(i)
                 if e_in is not None:
-                    p, d = e_in[0], e_in[1]
+                    p, d = e_in[1][0], e_in[1][1]
                     out[p] = back[d][out[d]]
             return out
 
@@ -305,10 +364,10 @@ def solve_sharding(graph: DataflowGraph, t: int, topo: Topology,
                     cbest, sbest = float("inf"), old
                     for si in range(sizes[i]):
                         c = kernel_cost(i, si)
-                        c += sum(edge_cost(e, cur[e[0]], si)
-                                 for e in edges if e[1] == i)
-                        c += sum(edge_cost(e, si, cur[e[1]])
-                                 for e in edges if e[0] == i)
+                        c += sum(float(ec[ei][cur[src], si])
+                                 for ei, src in in_edges[i])
+                        c += sum(float(ec[ei][si, cur[dst]])
+                                 for ei, dst in out_edges[i])
                         if c < cbest:
                             cbest, sbest = c, si
                     cur[i] = sbest
@@ -323,8 +382,8 @@ def solve_sharding(graph: DataflowGraph, t: int, topo: Topology,
             for si in range(sizes[i]):
                 greedy[i] = si
                 c = kernel_cost(i, si)
-                c += sum(edge_cost(e, greedy[e[0]], si)
-                         for e in edges if e[1] == i)
+                c += sum(float(ec[ei][greedy[src], si])
+                         for ei, src in in_edges[i])
                 opts.append(c)
             greedy[i] = int(min(range(sizes[i]), key=opts.__getitem__))
 
@@ -339,7 +398,8 @@ def solve_sharding(graph: DataflowGraph, t: int, topo: Topology,
 
     schemes = [cand[i][best[i]] for i in range(n)]
     h_n = [kernel_cost(i, best[i]) for i in range(n)]
-    h_m = [edge_cost(e, best[e[0]], best[e[1]]) for e in edges]
+    h_m = [float(ec[ei][best[i], best[j]])
+           for ei, (i, j, _b) in enumerate(edges)]
     cbytes = 0.0
     for i, s in enumerate(schemes):
         cbytes += s.comm_bytes(_priced_bytes(i, s))

@@ -58,17 +58,65 @@ def minmax_partition(costs: Sequence[float], p: int,
                 dp[k, j] = cand[i]
                 arg[k, j] = lo + i
     else:
-        def group(i: int, j: int) -> float:
-            return pref[j] - pref[i] + extra(i, j)
-
+        # vectorized like the ``extra is None`` path: materialize the extra
+        # term once as a dense (i, j) table — O(n²) callback invocations
+        # instead of the O(n²·p) of the scalar reference — then run the same
+        # numpy inner minimization. Arithmetic order matches the scalar
+        # implementation exactly ((pref[j] - pref[i]) + extra), so results
+        # are bit-identical (``minmax_partition_scalar`` certifies this in
+        # tests/test_solver.py).
+        E = np.zeros((n + 1, n + 1))
+        for j in range(1, n + 1):
+            for i in range(j):
+                E[i, j] = extra(i, j)
         for k in range(1, p + 1):
+            prev = dp[k - 1]
             for j in range(k, n + 1):
-                for i in range(k - 1, j):
-                    c = max(dp[k - 1, i], group(i, j))
-                    if c < dp[k, j]:
-                        dp[k, j] = c
-                        arg[k, j] = i
+                lo = k - 1
+                cand = np.maximum(prev[lo:j],
+                                  (pref[j] - pref[lo:j]) + E[lo:j, j])
+                i = int(np.argmin(cand))
+                dp[k, j] = cand[i]
+                arg[k, j] = lo + i
     bounds = []
+    j = n
+    for k in range(p, 0, -1):
+        i = int(arg[k, j])
+        bounds.append(i)
+        j = i
+    bounds.reverse()
+    return bounds, float(dp[p, n])
+
+
+def minmax_partition_scalar(costs: Sequence[float], p: int,
+                            extra: Callable[[int, int], float] | None = None
+                            ) -> tuple[list[int], float]:
+    """Pure-Python reference implementation of :func:`minmax_partition`.
+
+    Kept as the agreement oracle for the vectorized paths (property tests
+    assert bit-identical boundaries and objectives); never used on hot paths.
+    """
+    n = len(costs)
+    if p > n:
+        p = n
+    pref = np.concatenate([[0.0], np.cumsum(costs)])
+    INF = float("inf")
+    dp = np.full((p + 1, n + 1), INF)
+    arg = np.full((p + 1, n + 1), -1, dtype=np.int64)
+    dp[0, 0] = 0.0
+
+    def group(i: int, j: int) -> float:
+        g = pref[j] - pref[i]
+        return g + extra(i, j) if extra is not None else g
+
+    for k in range(1, p + 1):
+        for j in range(k, n + 1):
+            for i in range(k - 1, j):
+                c = max(dp[k - 1, i], group(i, j))
+                if c < dp[k, j]:
+                    dp[k, j] = c
+                    arg[k, j] = i
+    bounds: list[int] = []
     j = n
     for k in range(p, 0, -1):
         i = int(arg[k, j])

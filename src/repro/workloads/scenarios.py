@@ -1,0 +1,118 @@
+"""Named DSE scenarios — the paper's four workload families as first-class
+sweeps (§VI.C: GPT3-1T, DLRM-793B, HPL-5M², FFT-1T).
+
+Each scenario bundles a *picklable* workload builder (a module-level
+function, so ``DSEEngine`` can ship it across process boundaries even under
+spawn semantics) with the sweep grid the paper uses for that family, plus a
+``smoke`` variant small enough for tests and CI: fewer chips per system, a
+reduced grid, and — for the LLM family — GPT3-175B, which still fits a
+64-chip machine.
+
+Consumed by ``benchmarks/bench_dse.py`` and ``examples/dse_scenario.py``:
+
+    engine = DSEEngine()
+    result = engine.sweep_scenario("llm", smoke=True)
+    result.frontier   # Pareto-optimal systems (util × cost eff × power eff)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from ..core.dse_engine import SweepSpec
+from ..core.interchip import TrainWorkload
+from ..systems.system import SystemSpec
+from .dlrm import dlrm_workload
+from .fft import fft_workload
+from .hpl import hpl_workload
+from .llm import GPT3_1T, GPT3_175B, gpt_workload
+
+
+# --- module-level builders (picklable; signature: system -> TrainWorkload) ---
+def llm_work(system: SystemSpec) -> TrainWorkload:
+    return gpt_workload(GPT3_1T, global_batch=512, microbatch=1)
+
+
+def llm_smoke_work(system: SystemSpec) -> TrainWorkload:
+    # GPT3-1T cannot fit the smoke-sized machines; 175B reproduces the same
+    # qualitative heat map at 64 chips.
+    return gpt_workload(GPT3_175B, global_batch=512, microbatch=1)
+
+
+def dlrm_work(system: SystemSpec) -> TrainWorkload:
+    return dlrm_workload()
+
+
+def hpl_work(system: SystemSpec) -> TrainWorkload:
+    return hpl_workload()
+
+
+def fft_work(system: SystemSpec) -> TrainWorkload:
+    return fft_workload()
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One workload family's sweep: builder + grid + smoke variant."""
+
+    name: str
+    description: str
+    work_fn: Callable[[SystemSpec], TrainWorkload]
+    spec: SweepSpec
+    smoke_work_fn: Callable[[SystemSpec], TrainWorkload] | None = None
+    smoke_spec: SweepSpec | None = None
+
+    def resolved(self, smoke: bool) -> "Scenario":
+        """The scenario with its smoke variant promoted, if requested."""
+        if not smoke:
+            return self
+        return dataclasses.replace(
+            self, work_fn=self.smoke_work_fn or self.work_fn,
+            spec=self.smoke_spec or self.spec,
+            smoke_work_fn=None, smoke_spec=None)
+
+
+_SMOKE_GRID = dict(n_chips=64,
+                   chips=("H100", "TPUv4", "SN30"),
+                   topologies=("torus2d", "dragonfly"),
+                   mem_net=(("DDR", "PCIe"), ("HBM", "PCIe"),
+                            ("HBM", "NVLink")))
+
+# HPL/FFT run one global problem instance (global_batch=1 ⇒ DP=1); the whole
+# machine must be absorbed by TP (×PP), so TP is unbounded for those.
+SCENARIOS: dict[str, Scenario] = {
+    "llm": Scenario(
+        name="llm",
+        description="GPT3-1T training, global batch 512 (Figs 10-13)",
+        work_fn=llm_work, spec=SweepSpec(max_tp=64),
+        smoke_work_fn=llm_smoke_work,
+        smoke_spec=SweepSpec(max_tp=64, **_SMOKE_GRID)),
+    "dlrm": Scenario(
+        name="dlrm",
+        description="DLRM-793B recommendation training (Fig 14)",
+        work_fn=dlrm_work, spec=SweepSpec(max_tp=64),
+        smoke_spec=SweepSpec(max_tp=64, **_SMOKE_GRID)),
+    "hpl": Scenario(
+        name="hpl",
+        description="HPL 5M×5M LINPACK (Fig 15)",
+        work_fn=hpl_work, spec=SweepSpec(max_tp=None),
+        smoke_spec=SweepSpec(max_tp=None, **_SMOKE_GRID)),
+    "fft": Scenario(
+        name="fft",
+        description="1T-point distributed FFT (Figs 16-17)",
+        work_fn=fft_work, spec=SweepSpec(max_tp=None),
+        smoke_spec=SweepSpec(max_tp=None, **_SMOKE_GRID)),
+}
+
+
+def scenario_names() -> list[str]:
+    return list(SCENARIOS)
+
+
+def get_scenario(name: str, smoke: bool = False) -> Scenario:
+    try:
+        sc = SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; "
+                       f"available: {scenario_names()}") from None
+    return sc.resolved(smoke)

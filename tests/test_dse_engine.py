@@ -1,0 +1,259 @@
+"""DSEEngine tests: parallel determinism, memo-cache correctness, Pareto
+extraction, and the infeasible-point skip contract.
+
+These tests intentionally avoid hypothesis so they run on a bare
+install — the seeded random checks below mirror the property tests in
+test_solver.py for the vectorized minmax ``extra`` path.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import (DSEEngine, SweepSpec, cache_stats, caching_disabled,
+                        clear_caches, pareto_frontier, sweep)
+from repro.core.dse import design_grid
+from repro.core.solver import minmax_partition, minmax_partition_scalar
+from repro.workloads.llm import LLAMA_68M, gpt_workload
+from repro.workloads.scenarios import get_scenario, scenario_names
+
+# module-level so the workload builder is picklable under spawn semantics
+def _tiny_work(system):
+    return gpt_workload(LLAMA_68M, global_batch=64, microbatch=1)
+
+
+SMOKE_SPEC = SweepSpec(n_chips=16,
+                       chips=("H100", "SN30"),
+                       topologies=("torus2d", "dgx2"),
+                       mem_net=(("DDR", "PCIe"), ("HBM", "NVLink")),
+                       max_tp=16)
+
+
+# --------------------- vectorized minmax (seeded fallback) --------------------
+def test_minmax_extra_vectorized_matches_scalar_seeded():
+    rng = np.random.default_rng(0)
+    for _ in range(60):
+        n = int(rng.integers(2, 10))
+        costs = rng.uniform(0.1, 100.0, size=n).tolist()
+        p = int(rng.integers(1, 5))
+        pen = float(rng.uniform(0.0, 50.0))
+
+        def extra(i, j, pen=pen):
+            return pen + 0.25 * (j - i)
+
+        vb, vo = minmax_partition(costs, p, extra=extra)
+        sb, so = minmax_partition_scalar(costs, p, extra=extra)
+        assert vb == sb
+        assert vo == so  # bit-identical
+        vb0, vo0 = minmax_partition(costs, p)
+        sb0, so0 = minmax_partition_scalar(costs, p)
+        assert (vb0, vo0) == (sb0, so0)
+
+
+def test_minmax_extra_agrees_with_bnb_on_seeded_dags():
+    """Seeded mirror of the hypothesis property in test_solver.py: on
+    chain-connected random DAGs the extra-path DP matches the exact B&B
+    certifier restricted to the same group count."""
+    from conftest import random_dag
+    from repro.core.solver import branch_and_bound
+
+    rng = np.random.default_rng(7)
+    for _ in range(15):
+        g = random_dag(rng, max_kernels=6)
+        p_eff = min(int(rng.integers(1, 4)), g.n)
+        order = g.topo_order
+        costs = [g.kernels[i].flops for i in order]
+        w_topo = np.array([g.kernels[i].weight_bytes for i in order])
+
+        def extra(i, j, w_topo=w_topo):
+            return float(w_topo[i:j].sum()) * 1e-6
+
+        def objective(assign, costs=costs, extra=extra):
+            worst = 0.0
+            for part in sorted(set(int(a) for a in assign)):
+                members = [i for i in range(len(costs)) if assign[i] == part]
+                lo, hi = min(members), max(members) + 1
+                assert members == list(range(lo, hi))  # chain ⇒ contiguous
+                worst = max(worst, float(sum(costs[lo:hi])) + extra(lo, hi))
+            return worst
+
+        _, bc = branch_and_bound(
+            g, p_eff, objective,
+            feasible=lambda a, p=p_eff: len(set(a.tolist())) == p)
+        bounds, dp_obj = minmax_partition(costs, p_eff, extra=extra)
+        assert len(bounds) == p_eff
+        assert dp_obj == pytest.approx(bc, rel=1e-9)
+
+
+def test_minmax_extra_objective_matches_returned_split():
+    costs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0]
+
+    def extra(i, j):
+        return 0.5 * (j - i)
+
+    bounds, obj = minmax_partition(costs, 3, extra=extra)
+    assert bounds[0] == 0 and len(bounds) == 3
+    ends = bounds[1:] + [len(costs)]
+    groups = [sum(costs[i:j]) + extra(i, j) for i, j in zip(bounds, ends)]
+    assert obj == pytest.approx(max(groups), rel=1e-12)
+
+
+# ------------------------------ determinism ----------------------------------
+def test_parallel_engine_matches_serial_sweep_exactly():
+    """Parallel sweep must reproduce the serial row list bit-for-bit —
+    same order, same floats — on a 2-chip × 2-topology smoke grid."""
+    clear_caches()
+    with caching_disabled():
+        serial = sweep(_tiny_work, n_chips=SMOKE_SPEC.n_chips,
+                       chips=SMOKE_SPEC.chips,
+                       topologies=SMOKE_SPEC.topologies,
+                       mem_net=SMOKE_SPEC.mem_net, max_tp=SMOKE_SPEC.max_tp)
+    clear_caches()
+    engine = DSEEngine(parallel=True, max_workers=2)
+    par = engine.sweep(_tiny_work, SMOKE_SPEC)
+    assert len(par) == len(serial) > 0
+    assert [p.row() for p in par] == [p.row() for p in serial]
+
+
+def test_serial_engine_matches_sweep_exactly():
+    clear_caches()
+    engine = DSEEngine(parallel=False)
+    pts = engine.sweep(_tiny_work, SMOKE_SPEC)
+    with caching_disabled():
+        ref = sweep(_tiny_work, n_chips=SMOKE_SPEC.n_chips,
+                    chips=SMOKE_SPEC.chips,
+                    topologies=SMOKE_SPEC.topologies,
+                    mem_net=SMOKE_SPEC.mem_net, max_tp=SMOKE_SPEC.max_tp)
+    assert [p.row() for p in pts] == [p.row() for p in ref]
+
+
+# ------------------------------ memo cache -----------------------------------
+def test_cache_hits_on_default_style_grid_and_values_identical():
+    """The default grid shares inner solves across points: the cache must
+    actually hit, and cached results must equal cold solves exactly."""
+    clear_caches()
+    with caching_disabled():
+        cold = sweep(_tiny_work, n_chips=SMOKE_SPEC.n_chips,
+                     chips=SMOKE_SPEC.chips,
+                     topologies=SMOKE_SPEC.topologies,
+                     mem_net=SMOKE_SPEC.mem_net, max_tp=SMOKE_SPEC.max_tp)
+    clear_caches()
+    warm = sweep(_tiny_work, n_chips=SMOKE_SPEC.n_chips,
+                 chips=SMOKE_SPEC.chips,
+                 topologies=SMOKE_SPEC.topologies,
+                 mem_net=SMOKE_SPEC.mem_net, max_tp=SMOKE_SPEC.max_tp)
+    stats = cache_stats()
+    assert stats.hits > 0
+    assert stats.by_space["sharding"][0] > 0
+    assert stats.by_space["minmax"][0] > 0
+    assert [p.row() for p in warm] == [p.row() for p in cold]
+
+
+def test_cache_second_run_is_pure_hit_and_identical():
+    clear_caches()
+    first = sweep(_tiny_work, n_chips=SMOKE_SPEC.n_chips,
+                  chips=SMOKE_SPEC.chips, topologies=SMOKE_SPEC.topologies,
+                  mem_net=SMOKE_SPEC.mem_net, max_tp=SMOKE_SPEC.max_tp)
+    before = cache_stats()
+    second = sweep(_tiny_work, n_chips=SMOKE_SPEC.n_chips,
+                   chips=SMOKE_SPEC.chips, topologies=SMOKE_SPEC.topologies,
+                   mem_net=SMOKE_SPEC.mem_net, max_tp=SMOKE_SPEC.max_tp)
+    after = cache_stats()
+    assert after.hits > before.hits
+    assert after.misses == before.misses  # second run never solves cold
+    assert [p.row() for p in second] == [p.row() for p in first]
+
+
+# --------------------------- infeasible points -------------------------------
+def _undecomposable_work(system):
+    # global_batch == 1 forces DP == 1; with max_tp == 1 and n_layers == 1
+    # (pp ≤ 3) no (tp, pp, dp) decomposition of 16 chips exists.
+    from repro.workloads.hpl import hpl_workload
+
+    return hpl_workload()
+
+
+def test_sweep_skips_undecomposable_points_without_crashing():
+    spec = SweepSpec(n_chips=16, chips=("H100",), topologies=("torus2d",),
+                     mem_net=(("HBM", "NVLink"),), max_tp=1)
+    clear_caches()
+    serial = sweep(_undecomposable_work, n_chips=spec.n_chips,
+                   chips=spec.chips, topologies=spec.topologies,
+                   mem_net=spec.mem_net, max_tp=spec.max_tp)
+    assert serial == []  # skipped, not raised
+    engine = DSEEngine()
+    assert engine.sweep(_undecomposable_work, spec) == []
+
+
+def test_sweep_returns_point_per_cell_when_all_decompose():
+    # same workload, but with TP unbounded every cell decomposes (tp=16):
+    # nothing may be dropped and order must follow the grid.
+    spec = SweepSpec(n_chips=16, chips=("H100", "SN30"),
+                     topologies=("torus2d",),
+                     mem_net=(("HBM", "NVLink"),), max_tp=None)
+    engine = DSEEngine()
+    pts = engine.sweep(_undecomposable_work, spec)
+    assert len(pts) == len(design_grid(spec.chips, spec.mem_net,
+                                       spec.topologies))
+
+
+# ------------------------------- Pareto --------------------------------------
+class _FakePlan:
+    def __init__(self, feasible):
+        self.feasible = feasible
+
+
+class _FakePoint:
+    def __init__(self, u, c, p, feasible=True):
+        self.utilization, self.cost_eff, self.power_eff = u, c, p
+        self.plan = _FakePlan(feasible)
+
+
+def test_pareto_frontier_drops_dominated_points():
+    a = _FakePoint(0.9, 10.0, 5.0)
+    b = _FakePoint(0.8, 20.0, 4.0)
+    dominated = _FakePoint(0.7, 9.0, 3.0)   # worse than a everywhere
+    front = pareto_frontier([a, b, dominated])
+    assert a in front and b in front and dominated not in front
+
+
+def test_pareto_frontier_feasible_auto_fallback():
+    bad = _FakePoint(0.5, 5.0, 5.0, feasible=False)
+    good = _FakePoint(0.4, 4.0, 4.0, feasible=True)
+    # feasible point exists → frontier restricted to it even if dominated
+    assert pareto_frontier([bad, good]) == [good]
+    # no feasible points → fall back to all, frontier non-empty
+    assert pareto_frontier([bad]) == [bad]
+    assert pareto_frontier([]) == []
+
+
+def test_pareto_points_mutually_nondominated():
+    rng = np.random.default_rng(1)
+    pts = [_FakePoint(*rng.uniform(0.1, 1.0, size=3)) for _ in range(40)]
+    front = pareto_frontier(pts)
+    assert front
+    for x in front:
+        for y in front:
+            if x is y:
+                continue
+            assert not (y.utilization >= x.utilization
+                        and y.cost_eff >= x.cost_eff
+                        and y.power_eff >= x.power_eff)
+
+
+# --------------------------- scenario registry -------------------------------
+def test_scenario_registry_lists_all_families():
+    assert set(scenario_names()) == {"llm", "dlrm", "hpl", "fft"}
+    with pytest.raises(KeyError):
+        get_scenario("nope")
+
+
+@pytest.mark.parametrize("name", ["llm", "dlrm", "hpl", "fft"])
+def test_smoke_scenarios_sweep_and_have_nonempty_frontier(name):
+    engine = DSEEngine()
+    res = engine.sweep_scenario(name, smoke=True)
+    assert res.points, f"{name} smoke sweep returned no design points"
+    assert res.frontier, f"{name} smoke sweep has an empty Pareto frontier"
+    assert all(any(f is p for p in res.points) for f in res.frontier)
+    # frontier rows carry the workload tag for the bench tables
+    assert res.rows()[0]["workload"] == name

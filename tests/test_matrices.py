@@ -3,6 +3,10 @@ from __future__ import annotations
 
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need the dev extra (requirements-dev.txt)")
 from hypothesis import given, settings
 
 from repro.core.graph import DataflowGraph, Kernel, Tensor

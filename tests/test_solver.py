@@ -5,13 +5,18 @@ import itertools
 
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need the dev extra (requirements-dev.txt)")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core.graph import chain_graph, Kernel
 from repro.core.solver import (bounds_to_assign, branch_and_bound,
                                design_space_size, enumerate_parallelism,
-                               minmax_partition, minsum_partition)
+                               minmax_partition, minmax_partition_scalar,
+                               minsum_partition)
 
 from conftest import dags
 
@@ -107,6 +112,66 @@ def test_branch_and_bound_beats_or_matches_contiguous_dp(g):
     _, dp_obj = minmax_partition(costs, p_max)
     assert bc <= dp_obj * (1 + 1e-9)
     assert bc == pytest.approx(dp_obj, rel=1e-9)
+
+
+@given(st.lists(st.floats(min_value=0.1, max_value=100.0),
+                min_size=2, max_size=9),
+       st.integers(min_value=1, max_value=4),
+       st.floats(min_value=0.0, max_value=50.0))
+@settings(max_examples=150, deadline=None)
+def test_minmax_extra_vectorized_matches_scalar(costs, p, penalty):
+    """The vectorized ``extra`` path must agree bit-for-bit with the scalar
+    reference implementation (same boundaries, same objective, same
+    tie-breaks)."""
+
+    def extra(i, j):
+        # deterministic, interval-dependent: boundary penalty + span term
+        return penalty + 0.25 * (j - i)
+
+    vb, vo = minmax_partition(costs, p, extra=extra)
+    sb, so = minmax_partition_scalar(costs, p, extra=extra)
+    assert vb == sb
+    assert vo == so  # bit-identical, not approx
+
+    # and the extra=None fast path agrees with the scalar reference too
+    vb0, vo0 = minmax_partition(costs, p)
+    sb0, so0 = minmax_partition_scalar(costs, p)
+    assert vb0 == sb0
+    assert vo0 == so0
+
+
+@given(dags(max_kernels=6), st.integers(min_value=1, max_value=3))
+@settings(max_examples=30, deadline=None)
+def test_minmax_extra_agrees_with_bnb_on_dags(g, p):
+    """On random DAGs (chain-connected, so monotone B&B assignments are
+    contiguous intervals) the vectorized extra-path DP matches the exact
+    branch & bound certifier restricted to the same group count."""
+    order = g.topo_order
+    f = np.array([k.flops for k in g.kernels])
+    w = np.array([k.weight_bytes for k in g.kernels])
+    costs = [f[i] for i in order]
+    w_topo = np.array([w[i] for i in order])
+    p_eff = min(p, g.n)
+
+    def extra(i, j):
+        return float(w_topo[i:j].sum()) * 1e-6
+
+    def objective(assign):
+        worst = 0.0
+        for part in sorted(set(int(a) for a in assign)):
+            members = [i for i in range(g.n) if assign[i] == part]
+            lo, hi = min(members), max(members) + 1
+            assert members == list(range(lo, hi))  # contiguity (chain DAG)
+            worst = max(worst, float(sum(costs[lo:hi])) + extra(lo, hi))
+        return worst
+
+    def exactly_p(assign):
+        return len(set(int(a) for a in assign)) == p_eff
+
+    ba, bc = branch_and_bound(g, p_eff, objective, feasible=exactly_p)
+    bounds, dp_obj = minmax_partition(costs, p_eff, extra=extra)
+    assert len(bounds) == p_eff
+    assert dp_obj == pytest.approx(bc, rel=1e-9)
 
 
 def test_enumerate_parallelism_exact_cover():

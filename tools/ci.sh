@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# CI gate — mirrors .github/workflows/ci.yml so it can run locally too.
+#
+#   tools/ci.sh            # install dev deps, run tests + smoke benches
+#   tools/ci.sh --no-install   # offline container: skip pip, tests still
+#                              # collect (hypothesis tests skip themselves)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [[ "${1:-}" != "--no-install" ]]; then
+    python -m pip install -r requirements-dev.txt \
+        || echo "WARN: pip install failed (offline?); property tests will skip"
+fi
+
+# the seed regression this gate exists for: collection must never fail,
+# with or without the dev extras installed
+PYTHONPATH=src python -m pytest -x -q
+
+# smoke benches: exercises the DSE engine end-to-end (parallel sweep,
+# memo cache, Pareto frontier, serial-vs-engine row identity)
+PYTHONPATH=src python -m benchmarks.run --smoke
