@@ -4,13 +4,19 @@
 interconnect and topology should we buy, for throughput / for cost
 efficiency / for power efficiency?"
 
-Runs through the parallel+cached ``DSEEngine`` scenario API: the smoke
-LLM scenario is exactly this question, and the Pareto frontier is the
-shortlist a system architect would actually take to procurement.
+Runs through the phase-split parallel+cached ``DSEEngine`` scenario API:
+the smoke LLM scenario is exactly this question, and the Pareto frontier
+is the shortlist a system architect would actually take to procurement.
+Workers run only the discrete plan phase; the whole grid is then priced
+in one batched call (numpy, or jax.vmap via
+DFMODEL_PRICING_BACKEND=jax). The streaming section at the end shows
+``sweep_iter``: points arrive as plan groups finish, and the sweep stops
+submitting work once enough feasible systems have streamed out.
 
   PYTHONPATH=src python examples/dse_scenario.py
 """
-from repro.core import DSEEngine
+from repro.core import DSEEngine, stop_after_feasible
+from repro.workloads.scenarios import get_scenario
 
 
 def main():
@@ -42,6 +48,18 @@ def main():
               f"{r['topology']:16s} util={r['utilization']:.3f} "
               f"cost={r['cost_eff_gflops_per_usd']:.2f} "
               f"power={r['power_eff_gflops_per_w']:.1f}")
+
+    # streaming with early exit: stop once 5 feasible systems have arrived
+    sc = get_scenario("llm", smoke=True)
+    print("\nstreaming (stop after 5 feasible systems):")
+    for item in engine.sweep_iter(sc.work_fn, sc.spec,
+                                  stop=stop_after_feasible(5)):
+        if item.point is None:
+            continue
+        r = item.point.row()
+        tag = "feasible" if r["feasible"] else "infeasible"
+        print(f"  grid[{item.index:2d}] {r['chip']:6s} {r['memory']:4s} "
+              f"{r['link']:7s} util={r['utilization']:.3f} ({tag})")
 
 
 if __name__ == "__main__":

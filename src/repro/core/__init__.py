@@ -9,7 +9,11 @@ Public surface:
   solver              : minmax_partition, minsum_partition, branch_and_bound
   roofline (Fig 18)   : HierPoint, RooflineTerms
   DSE (§VI.C)         : sweep, DesignPoint, DSEEngine, SweepSpec,
-                        pareto_frontier (parallel+cached: dse_engine.py)
+                        pareto_frontier (parallel+cached: dse_engine.py);
+                        plan phase: plan_design_cells → PlannedPoint;
+                        streaming: DSEEngine.sweep_iter → SweepItem
+  pricing (batched)   : PlanVector, price_plans, price_plan_scalar,
+                        stack_plans, batched_roofline (numpy | jax.vmap)
   memo cache          : cache_stats, clear_caches, caching_disabled
   serving (§VIII)     : serving_sweep, speculative_throughput
   plan (runtime glue) : plan_for → MappingPlan consumed by repro.launch
@@ -27,9 +31,12 @@ from .roofline import (HierPoint, RooflineTerms, V5E_HBM_BW, V5E_ICI_BW,
                        V5E_PEAK_FLOPS)
 from .costpower import (cost_efficiency, power_efficiency, silicon_power_w,
                         silicon_price_usd)
-from .dse import DesignPoint, design_grid, sweep
-from .dse_engine import (DSEEngine, ScenarioResult, SweepSpec,
-                         pareto_frontier)
+from .dse import (DesignPoint, PlannedPoint, design_grid, plan_design_cells,
+                  price_planned, sweep)
+from .dse_engine import (DSEEngine, ScenarioResult, SweepItem, SweepSpec,
+                         pareto_frontier, stop_after_feasible)
+from .pricing import (PlanVector, batched_roofline, price_plan_scalar,
+                      price_plans, stack_plans)
 from .memo import (CacheStats, SolveCache, cache_stats, caching_disabled,
                    clear_caches)
 from .serving import (ServingPoint, SpecDecodePoint, expected_accepted,
@@ -49,8 +56,12 @@ __all__ = [
     "V5E_PEAK_FLOPS",
     "cost_efficiency", "power_efficiency", "silicon_power_w",
     "silicon_price_usd",
-    "DesignPoint", "design_grid", "sweep",
-    "DSEEngine", "ScenarioResult", "SweepSpec", "pareto_frontier",
+    "DesignPoint", "PlannedPoint", "design_grid", "plan_design_cells",
+    "price_planned", "sweep",
+    "DSEEngine", "ScenarioResult", "SweepItem", "SweepSpec",
+    "pareto_frontier", "stop_after_feasible",
+    "PlanVector", "batched_roofline", "price_plan_scalar", "price_plans",
+    "stack_plans",
     "CacheStats", "SolveCache", "cache_stats", "caching_disabled",
     "clear_caches",
     "ServingPoint", "SpecDecodePoint", "expected_accepted", "serving_sweep",

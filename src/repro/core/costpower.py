@@ -40,3 +40,10 @@ def cost_efficiency(util: float, system: SystemSpec) -> float:
 def power_efficiency(util: float, system: SystemSpec) -> float:
     """Achieved FLOP/s per watt of system power."""
     return util * system.peak_flops / system.power()
+
+
+def system_efficiency_terms(system: SystemSpec) -> tuple[float, float, float]:
+    """(peak FLOP/s, price USD, power W) for a system — the constants the
+    plan phase folds into ``pricing.PlanVector`` so the batched price phase
+    computes cost/power efficiency without SystemSpec objects in hand."""
+    return system.peak_flops, system.price(), system.power()

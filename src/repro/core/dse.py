@@ -5,23 +5,42 @@ running the full two-level optimization per design point and reporting
 utilization, cost efficiency, power efficiency, and the compute/memory/
 network latency breakdown.
 
+Plan / price phases
+-------------------
+Evaluating a design point splits into two phases:
+
+* **plan** (:func:`plan_design_cells`) — the discrete solves: TP sharding,
+  PP min-max partition, the (tp, pp, dp) × dim-assignment argmin
+  (``interchip.candidate_plans`` + ``select_plan``) and the intra-chip
+  fusion DP. All of them memo-cache in ``repro.core.memo``; the phase emits
+  one compact :class:`repro.core.pricing.PlanVector` per grid cell. The
+  memory variants of a (chip, net, topology) system share a single
+  candidate enumeration — the plan solves are memory-independent except
+  for the capacity check and the intra-chip pass.
+* **price** (:func:`price_planned` → :func:`repro.core.pricing.price_plans`)
+  — all closed-form roofline/latency/utilization/cost/power arithmetic,
+  batched over the stacked plan vectors (numpy by default, ``jax.vmap``
+  when requested), so one call prices an entire grid.
+
+:func:`sweep` walks the grid through the phased path by default;
+``sweep(..., phased=False)`` is the serial scalar reference — one
+:func:`evaluate_design_point` per cell, pricing inline in Python — which
+the batched path is certified against *element-identically* (every float
+in ``DesignPoint.row()``) by ``tests/test_pricing.py``.
+
 Engine API
 ----------
-This module is the *serial reference path*: :func:`sweep` walks the design
-grid in order and prices one point at a time. The production engine lives in
-:mod:`repro.core.dse_engine`:
+The production engine lives in :mod:`repro.core.dse_engine`:
 
-* ``DSEEngine.sweep(work_fn, spec)`` — process-parallel evaluation of the
-  same grid with a deterministic ordered reduce: results are collected by
-  grid index, so the returned list is element-for-element identical
-  (including every float in ``DesignPoint.row()``) to this module's serial
-  sweep.
-* ``DSEEngine.sweep_scenario(name, smoke=...)`` — named sweeps over the four
+* ``DSEEngine.sweep(work_fn, spec)`` — process-parallel planning of the
+  same grid (plan groups shipped to a worker pool) + one batched pricing
+  call, with a deterministic ordered reduce: the returned list is
+  element-for-element identical to this module's sweep.
+* ``DSEEngine.sweep_iter(work_fn, spec)`` — streaming variant yielding
+  grid-index-tagged points in completion order, with early-exit.
+* ``DSEEngine.sweep_scenario(name, smoke=...)`` — named sweeps over the
   workload families (``repro.workloads.scenarios``) plus Pareto-frontier
   extraction over utilization × cost_eff × power_eff.
-
-Both paths share :func:`design_grid` / :func:`evaluate_design_point` below,
-which is what makes the parallel reduce deterministic by construction.
 
 Cache key contract
 ------------------
@@ -35,25 +54,30 @@ under structural keys (see that module's docstring for the full contract):
   memory variant.
 * ``"intra"``   : ``(scaled layer fingerprint, chip, mem, tuple(h_n),
   tuple(h_m), mode)``
+* ``"subdiv"``  : ``(topology, degrees, allow_subdivision)``
 
 Keys never involve object identity, so the cache hits across design points
 even though ``work_fn`` rebuilds the workload graph for every system, and a
-cached value is always computed from bit-identical inputs — cached and cold
-sweeps return identical results.
+cached value is always computed from bit-identical inputs — cached and
+uncached sweeps return identical results.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Iterable
+import math
+from typing import Callable, Iterable, Sequence
 
 from ..systems.chips import (CHIPS, INTERCONNECTS, MEMORIES, ChipSpec,
                              InterconnectSpec, MemorySpec)
 from ..systems.system import SystemSpec
 from ..systems.topology import TOPOLOGIES
-from .costpower import cost_efficiency, power_efficiency
-from .interchip import InterChipPlan, TrainWorkload, optimize_inter_chip
-from .intrachip import optimize_intra_chip
+from .costpower import (cost_efficiency, power_efficiency,
+                        system_efficiency_terms)
+from .interchip import (InterChipPlan, TrainWorkload, _work_key,
+                        candidate_plans, optimize_inter_chip, select_plan)
+from .intrachip import IntraChipResult, optimize_intra_chip
 from .memo import GLOBAL_CACHE
+from .pricing import PlanVector, price_plans
 
 
 @dataclasses.dataclass
@@ -109,12 +133,14 @@ def build_system(cell: GridCell, n_chips: int) -> SystemSpec:
                       chip, mem, topo)
 
 
+# --- scalar reference path ---------------------------------------------------
 def evaluate_design_point(work_fn: Callable[[SystemSpec], TrainWorkload],
                           cell: GridCell, n_chips: int,
                           max_tp: int | None = 64, max_pp: int | None = None,
                           execution: str = "auto") -> DesignPoint | None:
-    """Price one grid cell; ``None`` marks an infeasible/undecomposable cell
-    (the sweep *skips* those rather than crashing)."""
+    """Plan *and* price one grid cell, scalar-by-scalar (the reference);
+    ``None`` marks an infeasible/undecomposable cell (the sweep *skips*
+    those rather than crashing)."""
     system = build_system(cell, n_chips)
     work = work_fn(system)
     try:
@@ -131,11 +157,24 @@ def sweep(work_fn: Callable[[SystemSpec], TrainWorkload],
           topologies: Iterable[str] = DEFAULT_TOPOLOGIES,
           mem_net: Iterable[tuple[str, str]] = DEFAULT_MEM_NET,
           max_tp: int | None = 64, max_pp: int | None = None,
-          execution: str = "auto") -> list[DesignPoint]:
+          execution: str = "auto", phased: bool = True,
+          pricing_backend: str = "auto") -> list[DesignPoint]:
     """The 80-system cartesian sweep (4 chips × 5 topologies × 4 mem/net),
-    evaluated serially in grid order (the reference for ``DSEEngine``)."""
+    evaluated in grid order.
+
+    ``phased=True`` (default) runs the plan phase over the grid and prices
+    everything in one batched call; ``phased=False`` is the serial scalar
+    reference (one ``evaluate_design_point`` per cell). Both return
+    element-identical ``DesignPoint`` lists — the property
+    ``tests/test_pricing.py`` certifies.
+    """
+    cells = design_grid(chips, mem_net, topologies)
+    if phased:
+        planned = plan_design_cells(work_fn, cells, n_chips, max_tp=max_tp,
+                                    max_pp=max_pp, execution=execution)
+        return price_planned(planned, backend=pricing_backend)
     points: list[DesignPoint] = []
-    for cell in design_grid(chips, mem_net, topologies):
+    for cell in cells:
         point = evaluate_design_point(work_fn, cell, n_chips,
                                       max_tp=max_tp, max_pp=max_pp,
                                       execution=execution)
@@ -144,26 +183,36 @@ def sweep(work_fn: Callable[[SystemSpec], TrainWorkload],
     return points
 
 
-def _to_point(work: TrainWorkload, system: SystemSpec, plan: InterChipPlan,
-              execution: str) -> DesignPoint:
-    # refine the critical stage with the intra-chip pass for the breakdown.
+def _resolve_mode(system: SystemSpec, execution: str) -> str:
     # execution='auto' follows the chip's native model: spatial-dataflow
     # chips (RDU/WSE) fuse on-chip, instruction chips (GPU/TPU) run
     # kernel-by-kernel — the paper's §VI.C setting.
     if execution == "auto":
-        mode = "dataflow" if system.chip.dataflow else "kbk"
-    else:
-        mode = execution
+        return "dataflow" if system.chip.dataflow else "kbk"
+    return execution
+
+
+def _intra_refine(work: TrainWorkload, system: SystemSpec,
+                  plan: InterChipPlan, execution: str) -> IntraChipResult:
+    """The intra-chip pass on the winning plan's per-chip shard (memoised)."""
+    mode = _resolve_mode(system, execution)
     layer = work.layer_graph.scaled(
         flop_scale=1.0 / plan.tp, bytes_scale=1.0 / plan.tp)
     key = (layer.fingerprint(), system.chip, system.memory,
            tuple(plan.sharding.h_n), tuple(plan.sharding.h_m), mode)
-    intra = GLOBAL_CACHE.get_or_compute(
+    return GLOBAL_CACHE.get_or_compute(
         "intra", key,
         lambda: optimize_intra_chip(layer, system.chip, system.memory,
                                     h_n=plan.sharding.h_n,
                                     h_m=plan.sharding.h_m, mode=mode))
-    total = intra.t_comp.sum() + intra.t_mem.sum() + intra.t_net.sum()
+
+
+def _to_point(work: TrainWorkload, system: SystemSpec, plan: InterChipPlan,
+              execution: str) -> DesignPoint:
+    # refine the critical stage with the intra-chip pass for the breakdown.
+    intra = _intra_refine(work, system, plan, execution)
+    tc, tm, tn = intra.sums()
+    total = tc + tm + tn
     util = plan.utilization
     # memory-bound refinement: if intra-chip memory time dominates the
     # inter-chip estimate, derate utilization accordingly
@@ -173,9 +222,9 @@ def _to_point(work: TrainWorkload, system: SystemSpec, plan: InterChipPlan,
         derate = min(1.0, per_layer_inter / intra.total_time)
         util = plan.utilization * derate
     breakdown = {
-        "compute": float(intra.t_comp.sum() / total) if total else 0.0,
-        "memory": float(intra.t_mem.sum() / total) if total else 0.0,
-        "network": float(intra.t_net.sum() / total) if total else 0.0,
+        "compute": tc / total if total else 0.0,
+        "memory": tm / total if total else 0.0,
+        "network": tn / total if total else 0.0,
     }
     return DesignPoint(system, plan, util,
                        cost_efficiency(util, system),
@@ -183,5 +232,110 @@ def _to_point(work: TrainWorkload, system: SystemSpec, plan: InterChipPlan,
 
 
 def _stage_layers(plan: InterChipPlan, work: TrainWorkload) -> int:
-    import math
     return math.ceil(work.n_layers / plan.pp)
+
+
+# --- plan phase --------------------------------------------------------------
+@dataclasses.dataclass
+class PlannedPoint:
+    """Output of the plan phase for one grid cell: the winning discrete
+    plan plus the flat numeric record the price phase consumes."""
+
+    cell: GridCell
+    system: SystemSpec
+    plan: InterChipPlan
+    vector: PlanVector
+
+
+def _plan_vector(work: TrainWorkload, system: SystemSpec,
+                 plan: InterChipPlan, intra: IntraChipResult) -> PlanVector:
+    tc, tm, tn = intra.sums()
+    peak, price, power = system_efficiency_terms(system)
+    layers_per_stage = math.ceil(work.n_layers / plan.pp)
+    return PlanVector(
+        t_comp_stage=plan.t_comp_stage,
+        t_net_stage=plan.t_net_stage,
+        t_p2p=plan.t_p2p_stage,
+        t_dp=plan.breakdown["dp_comm"],
+        n_micro=float(plan.n_micro),
+        tp=float(plan.tp),
+        pp=float(plan.pp),
+        bwd_flop_mult=work.bwd_flop_mult,
+        bwd_comm_mult=work.bwd_comm_mult,
+        opt_mult=work.optimizer_bytes_per_param_byte,
+        model_flops=(work.total_fwd_flops_per_seq()
+                     * (1.0 + work.bwd_flop_mult) * work.global_batch),
+        weight_bytes=work.total_weight_bytes(),
+        act_bytes_layer=sum(t.bytes_ for t in work.layer_graph.tensors),
+        layers_per_stage=float(layers_per_stage),
+        stage_layers=float(max(1, layers_per_stage)),
+        n_chips=float(system.n_chips),
+        chip_peak=system.chip.peak_flops,
+        mem_capacity=system.memory.capacity,
+        sys_peak_flops=peak,
+        sys_price=price,
+        sys_power=power,
+        intra_comp=tc,
+        intra_mem=tm,
+        intra_net=tn,
+        intra_total=intra.total_time)
+
+
+def plan_design_cells(work_fn: Callable[[SystemSpec], TrainWorkload],
+                      cells: Sequence[GridCell], n_chips: int,
+                      max_tp: int | None = 64, max_pp: int | None = None,
+                      execution: str = "auto"
+                      ) -> list[PlannedPoint | None]:
+    """Plan phase over a list of grid cells (output aligned to ``cells``).
+
+    Cells whose (workload, chip, n_chips, topology) coincide — the memory
+    variants of one system — share a single candidate enumeration; only
+    the per-memory argmin, capacity check and intra-chip pass run per
+    cell. ``None`` marks an undecomposable cell, mirroring
+    :func:`evaluate_design_point`.
+    """
+    cand_cache: dict = {}
+    out: list[PlannedPoint | None] = []
+    for cell in cells:
+        system = build_system(cell, n_chips)
+        work = work_fn(system)
+        gkey = (_work_key(work), system.chip, system.n_chips,
+                system.topology, execution)
+        cands = cand_cache.get(gkey)
+        if cands is None:
+            cands = candidate_plans(work, system, max_tp=max_tp,
+                                    max_pp=max_pp, execution=execution)
+            cand_cache[gkey] = cands
+        plan = select_plan(cands, system.memory.capacity)
+        if plan is None:
+            out.append(None)
+            continue
+        intra = _intra_refine(work, system, plan, execution)
+        out.append(PlannedPoint(cell, system, plan,
+                                _plan_vector(work, system, plan, intra)))
+    return out
+
+
+# --- price phase -------------------------------------------------------------
+def price_planned(planned: Sequence[PlannedPoint | None],
+                  backend: str = "auto") -> list[DesignPoint]:
+    """Batch-price planned points (``None`` entries are skipped, matching
+    the scalar sweep's infeasible-cell skip)."""
+    live = [p for p in planned if p is not None]
+    if not live:
+        return []
+    priced = price_plans([p.vector for p in live], backend=backend)
+    return [_assemble(p, priced, i) for i, p in enumerate(live)]
+
+
+def _assemble(planned: PlannedPoint, priced: dict, i: int) -> DesignPoint:
+    plan = dataclasses.replace(planned.plan,
+                               feasible=bool(priced["feasible"][i]))
+    return DesignPoint(
+        planned.system, plan,
+        float(priced["utilization"][i]),
+        float(priced["cost_eff"][i]),
+        float(priced["power_eff"][i]),
+        {"compute": float(priced["frac_compute"][i]),
+         "memory": float(priced["frac_memory"][i]),
+         "network": float(priced["frac_network"][i])})

@@ -1,28 +1,43 @@
-"""DSEEngine — process-parallel, memoised design-space sweeps (§VI.C at scale).
+"""DSEEngine — process-parallel, memoised, phase-split design-space sweeps.
 
 The engine evaluates the same design grid as the serial reference
 :func:`repro.core.dse.sweep`, but
 
-* **in parallel**: design points are independent, so they are priced by a
-  ``concurrent.futures`` process pool. Results are reduced *by grid index*
-  (a deterministic ordered reduce), so the output list — including every
-  float in ``DesignPoint.row()`` — is identical to the serial sweep's,
-  regardless of worker count or completion order.
+* **phase-split**: workers run only the *plan* phase (the discrete solves,
+  grouped so the memory variants of each (chip, net, topology) system share
+  one candidate enumeration) and ship back compact
+  :class:`repro.core.pricing.PlanVector` records; the parent then runs the
+  *price* phase — all closed-form roofline/latency/cost/power arithmetic —
+  as one batched array call (numpy by default, ``jax.vmap`` on request).
+  ``DSEEngine(phased=False)`` keeps the original per-point path (each
+  worker plans *and* prices one cell) as a baseline for
+  ``benchmarks/bench_dse.py``.
+* **in parallel**: design points are independent, so plan groups are
+  evaluated by a ``concurrent.futures`` process pool. Results are reduced
+  *by grid index* (a deterministic ordered reduce), so the output list —
+  including every float in ``DesignPoint.row()`` — is identical to the
+  serial sweep's, regardless of worker count or completion order. The pool
+  transport is configurable via ``mp_context`` (fork / spawn / forkserver);
+  by default fork is used when safe and spawn once jax is loaded.
 * **cached**: the inner solves (TP sharding, PP min-max partition, the
-  memory-independent inter-chip plan, the intra-chip pass) are memoised in
-  ``repro.core.memo`` under structural keys. Submission order groups the
-  memory variants of each (chip, net, topology) into the same worker chunk
-  so the plan-level cache hits inside each worker; workers forked after a
-  warm-up also inherit the parent's cache.
+  memory-independent inter-chip plan, dim subdivision, the intra-chip pass)
+  are memoised in ``repro.core.memo`` under structural keys. Workers forked
+  after a warm-up inherit the parent's cache.
+* **streaming**: :meth:`DSEEngine.sweep_iter` yields grid-index-tagged
+  :class:`SweepItem`\\ s in completion order with windowed submission, so an
+  early-exit predicate (e.g. :func:`stop_after_feasible`) stops submitting
+  new work — live heat-map rendering and "stop after N feasible frontier
+  points" both fall out.
 * **scenario-first**: :meth:`DSEEngine.sweep_scenario` runs the named
-  sweeps over the four workload families (LLM / DLRM / HPL / FFT, see
-  :mod:`repro.workloads.scenarios`) and extracts the Pareto frontier over
-  ``utilization × cost_eff × power_eff`` — the decision surface the paper's
-  heat maps (Figs 10-17) visualize.
+  sweeps over the workload families (LLM / DLRM / HPL / FFT / MoE / Mamba2
+  / serving, see :mod:`repro.workloads.scenarios`) and extracts the Pareto
+  frontier over ``utilization × cost_eff × power_eff`` — the decision
+  surface the paper's heat maps (Figs 10-17) visualize.
 
-``benchmarks/bench_dse.py`` measures the engine against the serial uncached
-baseline and asserts row-identical output; ``examples/dse_scenario.py``
-shows the scenario/Pareto API.
+``benchmarks/bench_dse.py`` measures the phased engine against both the
+serial scalar baseline and the per-point parallel path, asserts
+row-identical output, and writes the numbers to ``BENCH_dse.json``;
+``examples/dse_scenario.py`` shows the scenario/Pareto and streaming APIs.
 """
 from __future__ import annotations
 
@@ -33,11 +48,12 @@ import os
 import pickle
 import sys
 import warnings
-from typing import Callable, Iterable, Sequence
+from typing import Callable, Iterable, Iterator, Sequence
 
 from ..systems.system import SystemSpec
 from .dse import (DEFAULT_CHIPS, DEFAULT_MEM_NET, DEFAULT_TOPOLOGIES,
-                  DesignPoint, design_grid, evaluate_design_point)
+                  DesignPoint, GridCell, PlannedPoint, design_grid,
+                  evaluate_design_point, plan_design_cells, price_planned)
 from .interchip import TrainWorkload
 from .memo import GLOBAL_CACHE, caching_disabled
 
@@ -54,7 +70,7 @@ class SweepSpec:
     max_pp: int | None = None
     execution: str = "auto"
 
-    def grid(self) -> list[tuple[str, str, str, str]]:
+    def grid(self) -> list[GridCell]:
         return design_grid(self.chips, self.mem_net, self.topologies)
 
 
@@ -70,6 +86,30 @@ class ScenarioResult:
 
     def rows(self) -> list[dict]:
         return [{"workload": self.name, **p.row()} for p in self.points]
+
+
+@dataclasses.dataclass
+class SweepItem:
+    """One streamed sweep result: the grid index, its cell, and the priced
+    point (``None`` for undecomposable cells, which ``sweep`` would skip)."""
+
+    index: int
+    cell: GridCell
+    point: DesignPoint | None
+
+
+def stop_after_feasible(n: int) -> Callable[[SweepItem], bool]:
+    """Early-exit predicate for :meth:`DSEEngine.sweep_iter`: stop once
+    ``n`` memory-feasible points have streamed out."""
+    seen = 0
+
+    def _stop(item: SweepItem) -> bool:
+        nonlocal seen
+        if item.point is not None and item.point.plan.feasible:
+            seen += 1
+        return seen >= n
+
+    return _stop
 
 
 def pareto_frontier(points: Sequence[DesignPoint],
@@ -104,13 +144,14 @@ def pareto_frontier(points: Sequence[DesignPoint],
 
 # --- worker plumbing ---------------------------------------------------------
 # Two transports:
-#   fork  — the work_fn closure (often a lambda) cannot be pickled, so the
-#           parent parks the sweep context in a module global, forks the
-#           pool, and ships only grid *indices* to workers.
-#   spawn — used when forking is unsafe (jax already imported: forking a
-#           multithreaded process is a documented deadlock risk). Requires a
-#           picklable work_fn (the scenario registry's builders all are);
-#           each task carries its full arguments.
+#   fork        — the work_fn closure (often a lambda) cannot be pickled, so
+#                 the parent parks the sweep context in a module global,
+#                 forks the pool, and ships only grid *indices* to workers.
+#   spawn /     — used when forking is unsafe (jax already imported: forking
+#   forkserver    a multithreaded process is a documented deadlock risk) or
+#                 requested via ``mp_context``. Requires a picklable work_fn
+#                 (the scenario registry's builders all are); each task
+#                 carries its full arguments.
 _WORKER_CTX: dict = {}
 
 
@@ -128,6 +169,32 @@ def _eval_args(args: tuple) -> DesignPoint | None:
                                  max_pp=max_pp, execution=execution)
 
 
+def _plan_group_index(idxs: tuple[int, ...]
+                      ) -> list[tuple[int, PlannedPoint | None]]:
+    ctx = _WORKER_CTX
+    cells = [ctx["grid"][i] for i in idxs]
+    planned = plan_design_cells(ctx["work_fn"], cells, ctx["n_chips"],
+                                max_tp=ctx["max_tp"], max_pp=ctx["max_pp"],
+                                execution=ctx["execution"])
+    return list(zip(idxs, planned))
+
+
+def _plan_group_args(args: tuple) -> list[tuple[int, PlannedPoint | None]]:
+    work_fn, cells, idxs, n_chips, max_tp, max_pp, execution = args
+    planned = plan_design_cells(work_fn, cells, n_chips, max_tp=max_tp,
+                                max_pp=max_pp, execution=execution)
+    return list(zip(idxs, planned))
+
+
+def _group_indices(grid: Sequence[GridCell]) -> list[tuple[int, ...]]:
+    """Grid indices grouped by (chip, net, topology): the memory variants
+    of one system, which share a plan-phase candidate enumeration."""
+    groups: dict[tuple, list[int]] = {}
+    for i, (chip, _mem, net, topo) in enumerate(grid):
+        groups.setdefault((chip, net, topo), []).append(i)
+    return [tuple(v) for v in groups.values()]
+
+
 #: Infrastructure failures that justify a silent-ish serial fallback (the
 #: fallback is warned about). Anything else — e.g. a work_fn bug — must
 #: propagate with its real traceback, not be retried serially.
@@ -138,7 +205,7 @@ def _pool_infra_errors() -> tuple[type[BaseException], ...]:
 
 
 class DSEEngine:
-    """Parallel + cached design-space sweep engine.
+    """Parallel + cached + phase-split design-space sweep engine.
 
     Parameters
     ----------
@@ -151,14 +218,40 @@ class DSEEngine:
         ``False`` runs every solve cold — the serial-baseline mode of
         ``benchmarks/bench_dse.py``. (Fork workers inherit the disabled
         flag; spawn workers start fresh either way.)
+    mp_context:
+        Explicit multiprocessing start method (``"fork"``, ``"spawn"``,
+        ``"forkserver"``) or a ``multiprocessing`` context object. Default
+        ``None`` keeps the auto-detection: fork when available and jax has
+        not been imported, spawn otherwise. Non-fork transports ship full
+        task arguments, so ``work_fn`` must be picklable.
+    phased:
+        ``True`` (default) splits evaluation into a parallel plan phase +
+        one batched pricing call; ``False`` keeps the per-point path where
+        each worker plans and prices a single cell.
+    pricing_backend:
+        ``"numpy"``, ``"jax"``, or ``"auto"`` (env var
+        ``DFMODEL_PRICING_BACKEND``, else numpy) — forwarded to
+        :func:`repro.core.pricing.price_plans`.
     """
 
     def __init__(self, max_workers: int | None = None,
                  parallel: bool | str = "auto",
-                 use_cache: bool = True) -> None:
+                 use_cache: bool = True,
+                 mp_context: str | multiprocessing.context.BaseContext | None
+                 = None,
+                 phased: bool = True,
+                 pricing_backend: str = "auto") -> None:
         self.max_workers = max_workers or (os.cpu_count() or 1)
         self.parallel = parallel
         self.use_cache = use_cache
+        if isinstance(mp_context, str):
+            if mp_context not in multiprocessing.get_all_start_methods():
+                raise ValueError(
+                    f"mp_context {mp_context!r} not available on this "
+                    f"platform; have {multiprocessing.get_all_start_methods()}")
+        self.mp_context = mp_context
+        self.phased = phased
+        self.pricing_backend = pricing_backend
 
     # -- core sweep ----------------------------------------------------------
     def sweep(self, work_fn: Callable[[SystemSpec], TrainWorkload],
@@ -166,24 +259,68 @@ class DSEEngine:
         """Price every grid cell of ``spec``; skip infeasible cells.
 
         Output order and values are identical to
-        ``repro.core.dse.sweep(work_fn, **spec fields)``.
+        ``repro.core.dse.sweep(work_fn, **spec fields, phased=False)``.
         """
         grid = spec.grid()
-        results = None
+        if not self.phased:
+            return self._sweep_perpoint(work_fn, spec, grid)
+        planned: list[PlannedPoint | None] | None = None
         if self._should_parallelize(len(grid)):
             try:
-                results = self._parallel_eval(work_fn, spec, grid)
+                planned = self._parallel_plan(work_fn, spec, grid)
             except _pool_infra_errors() as exc:
-                # pool infrastructure failed (no start method, worker died,
-                # unpicklable work_fn under spawn) — the sweep itself is
-                # still fine serially. work_fn errors are NOT caught: they
-                # propagate with their real traceback.
                 warnings.warn(f"parallel sweep unavailable ({exc!r}); "
                               f"falling back to serial", RuntimeWarning,
                               stacklevel=2)
-        if results is None:
-            results = self._serial_eval(work_fn, spec, grid)
-        return [p for p in results if p is not None]
+        if planned is None:
+            with self._cache_mode():
+                planned = plan_design_cells(work_fn, grid, spec.n_chips,
+                                            max_tp=spec.max_tp,
+                                            max_pp=spec.max_pp,
+                                            execution=spec.execution)
+        return price_planned(planned, backend=self.pricing_backend)
+
+    def sweep_iter(self, work_fn: Callable[[SystemSpec], TrainWorkload],
+                   spec: SweepSpec = SweepSpec(),
+                   stop: Callable[[SweepItem], bool] | None = None
+                   ) -> Iterator[SweepItem]:
+        """Stream :class:`SweepItem`\\ s as plan groups finish.
+
+        Items carry their grid index so consumers can re-order; every index
+        of the grid is delivered exactly once (unless ``stop`` ends the
+        sweep early). ``stop`` is called after each yield; a truthy return
+        cancels all not-yet-running work and ends the iteration. Work is
+        submitted in a bounded window (≈2 tasks per worker), so an early
+        stop genuinely avoids planning the rest of the grid.
+
+        Points are priced through the same batched backend as :meth:`sweep`
+        (one batch per plan group) — pricing is elementwise over the batch
+        axis, so streamed values are bit-identical to a full sweep's.
+        """
+        grid = spec.grid()
+        delivered: set[int] = set()
+        if self._should_parallelize(len(grid)):
+            gen = self._parallel_iter(work_fn, spec, grid, stop)
+            while True:
+                try:
+                    item = next(gen)
+                except StopIteration:
+                    # the parallel stream completed (or stop() fired in it)
+                    return
+                except _pool_infra_errors() as exc:
+                    # mid-stream pool failure: fall through to the serial
+                    # path for the *undelivered* indices only, preserving
+                    # the exactly-once contract (and any state the stop
+                    # predicate accumulated so far)
+                    warnings.warn(f"parallel sweep unavailable ({exc!r}); "
+                                  f"streaming serially", RuntimeWarning,
+                                  stacklevel=2)
+                    break
+                delivered.add(item.index)
+                yield item
+        pending = [(i, cell) for i, cell in enumerate(grid)
+                   if i not in delivered]
+        yield from self._serial_iter(work_fn, spec, pending, stop)
 
     def sweep_scenario(self, name: str, smoke: bool = False
                        ) -> ScenarioResult:
@@ -212,19 +349,47 @@ class DSEEngine:
             return self.max_workers > 1
         return self.max_workers > 1 and grid_size >= 4
 
-    @staticmethod
-    def _start_method() -> str:
+    def _start_method(self) -> str:
         """Pick the pool transport.
 
-        Forking a multithreaded process is a documented deadlock risk, and
-        importing jax starts worker threads — so once jax is loaded (the
-        kernel test suite, a training session) we use spawn, which needs a
-        picklable work_fn. Otherwise fork, which supports closures.
+        An explicit ``mp_context`` wins. Otherwise: forking a multithreaded
+        process is a documented deadlock risk, and importing jax starts
+        worker threads — so once jax is loaded (the kernel test suite, a
+        training session) we use spawn, which needs a picklable work_fn.
+        Otherwise fork, which supports closures.
         """
+        if isinstance(self.mp_context, str):
+            return self.mp_context
+        if self.mp_context is not None:
+            return self.mp_context.get_start_method()
         methods = multiprocessing.get_all_start_methods()
         if "fork" in methods and "jax" not in sys.modules:
             return "fork"
         return "spawn"
+
+    def _mp_context(self) -> multiprocessing.context.BaseContext:
+        if (self.mp_context is not None
+                and not isinstance(self.mp_context, str)):
+            return self.mp_context
+        return multiprocessing.get_context(self._start_method())
+
+    # -- per-point path (PR 1 baseline) --------------------------------------
+    def _sweep_perpoint(self, work_fn, spec: SweepSpec, grid):
+        results = None
+        if self._should_parallelize(len(grid)):
+            try:
+                results = self._parallel_eval(work_fn, spec, grid)
+            except _pool_infra_errors() as exc:
+                # pool infrastructure failed (no start method, worker died,
+                # unpicklable work_fn under spawn) — the sweep itself is
+                # still fine serially. work_fn errors are NOT caught: they
+                # propagate with their real traceback.
+                warnings.warn(f"parallel sweep unavailable ({exc!r}); "
+                              f"falling back to serial", RuntimeWarning,
+                              stacklevel=2)
+        if results is None:
+            results = self._serial_eval(work_fn, spec, grid)
+        return [p for p in results if p is not None]
 
     def _serial_eval(self, work_fn, spec: SweepSpec, grid):
         with self._cache_mode():
@@ -251,11 +416,11 @@ class DSEEngine:
         # keep chunks small enough that every worker gets work
         chunk = min(max(group, 1), max(1, per_worker))
         method = self._start_method()
-        ctx = multiprocessing.get_context(method)
+        ctx = self._mp_context()
 
-        if method == "spawn":
-            # spawn ships full task args — requires a picklable work_fn;
-            # an unpicklable one is an infra error → serial fallback
+        if method != "fork":
+            # spawn/forkserver ship full task args — requires a picklable
+            # work_fn; an unpicklable one is an infra error → serial fallback
             pickle.dumps(work_fn)
             tasks = [(work_fn, grid[i], spec.n_chips, spec.max_tp,
                       spec.max_pp, spec.execution) for i in order]
@@ -276,6 +441,99 @@ class DSEEngine:
                     return out
         finally:
             _WORKER_CTX.clear()
+
+    # -- phased path ---------------------------------------------------------
+    def _plan_tasks(self, work_fn, spec: SweepSpec, grid):
+        """(worker fn, payload per group, cleanup-needed) for the pool."""
+        groups = _group_indices(grid)
+        method = self._start_method()
+        if method != "fork":
+            pickle.dumps(work_fn)
+            payload = [(work_fn, [grid[i] for i in idxs], idxs, spec.n_chips,
+                        spec.max_tp, spec.max_pp, spec.execution)
+                       for idxs in groups]
+            return _plan_group_args, payload, False
+        _WORKER_CTX.update(work_fn=work_fn, grid=grid, n_chips=spec.n_chips,
+                           max_tp=spec.max_tp, max_pp=spec.max_pp,
+                           execution=spec.execution)
+        return _plan_group_index, groups, True
+
+    def _parallel_plan(self, work_fn, spec: SweepSpec, grid
+                       ) -> list[PlannedPoint | None]:
+        import concurrent.futures as cf
+
+        workers = min(self.max_workers, max(1, len(grid) // 2))
+        fn, payload, used_ctx = self._plan_tasks(work_fn, spec, grid)
+        try:
+            with self._cache_mode():
+                with cf.ProcessPoolExecutor(max_workers=workers,
+                                            mp_context=self._mp_context()
+                                            ) as pool:
+                    out: list[PlannedPoint | None] = [None] * len(grid)
+                    for pairs in pool.map(fn, payload):
+                        for i, planned in pairs:
+                            out[i] = planned
+                    return out
+        finally:
+            if used_ctx:
+                _WORKER_CTX.clear()
+
+    def _serial_iter(self, work_fn, spec: SweepSpec, cells, stop):
+        """Lazily stream (index, cell) pairs in order."""
+        with self._cache_mode():
+            for i, cell in cells:
+                planned = plan_design_cells(work_fn, [cell], spec.n_chips,
+                                            max_tp=spec.max_tp,
+                                            max_pp=spec.max_pp,
+                                            execution=spec.execution)
+                pts = price_planned(planned, backend=self.pricing_backend)
+                item = SweepItem(i, cell, pts[0] if pts else None)
+                yield item
+                if stop is not None and stop(item):
+                    return
+
+    def _parallel_iter(self, work_fn, spec: SweepSpec, grid, stop):
+        import concurrent.futures as cf
+
+        workers = min(self.max_workers, max(1, len(grid) // 2))
+        fn, payload, used_ctx = self._plan_tasks(work_fn, spec, grid)
+        window = max(2 * workers, workers + 1)
+        pool = cf.ProcessPoolExecutor(max_workers=workers,
+                                      mp_context=self._mp_context())
+        try:
+            with self._cache_mode():
+                queue = iter(payload)
+                pending: set = set()
+                for task in queue:
+                    pending.add(pool.submit(fn, task))
+                    if len(pending) >= window:
+                        break
+                while pending:
+                    done, pending = cf.wait(
+                        pending, return_when=cf.FIRST_COMPLETED)
+                    for fut in done:
+                        pairs = fut.result()
+                        for item in self._stream_group(grid, pairs):
+                            yield item
+                            if stop is not None and stop(item):
+                                for f in pending:
+                                    f.cancel()
+                                return
+                        for task in queue:
+                            pending.add(pool.submit(fn, task))
+                            if len(pending) >= window:
+                                break
+        finally:
+            pool.shutdown(wait=True, cancel_futures=True)
+            if used_ctx:
+                _WORKER_CTX.clear()
+
+    def _stream_group(self, grid, pairs) -> list[SweepItem]:
+        live = [(i, p) for i, p in pairs if p is not None]
+        pts = price_planned([p for _, p in live],
+                            backend=self.pricing_backend)
+        by_index = {i: pt for (i, _), pt in zip(live, pts)}
+        return [SweepItem(i, grid[i], by_index.get(i)) for i, _ in pairs]
 
     def _cache_mode(self):
         if self.use_cache:

@@ -30,7 +30,7 @@ from .graph import DataflowGraph
 from .memo import GLOBAL_CACHE
 from .sharding import ShardingSolution, solve_sharding
 from .solver import enumerate_parallelism, minmax_partition
-from .utilization import kernel_utilization
+from .utilization import kernel_utilizations
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,6 +54,7 @@ class TrainWorkload:
     bwd_flop_mult: float = 2.0
     bwd_comm_mult: float = 1.0   # bwd TP comm ≈ fwd TP comm
     optimizer_bytes_per_param_byte: float = 8.0  # bf16 w+g, fp32 master+m+v
+    dp_allreduce: bool = True    # False for serving: DP replicas sync nothing
 
     def total_weight_bytes(self) -> float:
         w = self.layer_graph.total_weight_bytes() * self.n_layers
@@ -158,6 +159,17 @@ def _subdivide_dims(topology: Topology, degrees: tuple[int, int, int],
     return uniq
 
 
+def _cached_subdivide(topology: Topology, degrees: tuple[int, int, int],
+                      allow_subdivision: bool) -> list[tuple[Topology, ...]]:
+    """Memoised ``_subdivide_dims`` — a pure function of the (frozen)
+    topology and degrees, and the hottest per-candidate Python loop of a
+    warm sweep (profiling: ~60% of a fully-cached design-point solve)."""
+    key = (topology, degrees, allow_subdivision)
+    return GLOBAL_CACHE.get_or_compute(
+        "subdiv", key,
+        lambda: _subdivide_dims(topology, degrees, allow_subdivision))
+
+
 # sharding solutions are pure functions of (graph content, tp,
 # topo-structure); the (tp, pp, dp) sweep revisits the same key hundreds of
 # times, and the DSE sweep rebuilds identical graphs once per system — the
@@ -183,7 +195,23 @@ def _work_key(work: TrainWorkload) -> tuple:
             work.post_graph.fingerprint() if work.post_graph else None,
             work.n_layers, work.global_batch, work.microbatch,
             work.bwd_flop_mult, work.bwd_comm_mult,
-            work.optimizer_bytes_per_param_byte)
+            work.optimizer_bytes_per_param_byte, work.dp_allreduce)
+
+
+def memo_plan(work: TrainWorkload, chip: ChipSpec, n_chips: int,
+              tp: int, pp: int, dp: int,
+              tp_topo: Topology, pp_topo: Topology, dp_topo: Topology,
+              execution: str = "dataflow") -> InterChipPlan | None:
+    """The memory-independent plan solve for one (tp, pp, dp,
+    dim-assignment) point, memoised on (workload, chip, n_chips, degrees,
+    dim structures). The returned plan's ``feasible`` flag is a placeholder
+    (``False``); callers apply the per-memory capacity check."""
+    key = (_work_key(work), chip, n_chips, tp, pp, dp,
+           tp_topo.dims, pp_topo.dims, dp_topo.dims, execution)
+    return GLOBAL_CACHE.get_or_compute(
+        "plan", key,
+        lambda: _price_plan(work, chip, n_chips, tp, pp, dp,
+                            tp_topo, pp_topo, dp_topo))
 
 
 def evaluate_plan(work: TrainWorkload, system: SystemSpec,
@@ -199,12 +227,8 @@ def evaluate_plan(work: TrainWorkload, system: SystemSpec,
     each (chip, net, topology) with several memories, all of which share one
     solve.
     """
-    key = (_work_key(work), system.chip, system.n_chips, tp, pp, dp,
-           tp_topo.dims, pp_topo.dims, dp_topo.dims, execution)
-    plan = GLOBAL_CACHE.get_or_compute(
-        "plan", key,
-        lambda: _price_plan(work, system.chip, system.n_chips, tp, pp, dp,
-                            tp_topo, pp_topo, dp_topo))
+    plan = memo_plan(work, system.chip, system.n_chips, tp, pp, dp,
+                     tp_topo, pp_topo, dp_topo, execution)
     if plan is None:
         return None
     return dataclasses.replace(
@@ -223,7 +247,7 @@ def _price_plan(work: TrainWorkload, chip: ChipSpec, n_chips: int,
 
     # per-layer fwd times on the TP group
     f = np.array([k.flops for k in work.layer_graph.kernels])
-    u = np.array([kernel_utilization(k) for k in work.layer_graph.kernels])
+    u = kernel_utilizations(work.layer_graph.kernels)
     ff = np.array([s.flop_factor for s in shard.schemes])
     t_comp_layer = float(((f * ff) / u).sum() / peak)
     t_net_layer = float(sum(shard.h_n) + sum(shard.h_m))
@@ -233,7 +257,7 @@ def _price_plan(work: TrainWorkload, chip: ChipSpec, n_chips: int,
             return 0.0, 0.0, 0.0
         s = _cached_sharding(graph, tp, tp_topo, tdims)
         fb = np.array([k.flops for k in graph.kernels])
-        ub = np.array([kernel_utilization(k) for k in graph.kernels])
+        ub = kernel_utilizations(graph.kernels)
         ffb = np.array([x.flop_factor for x in s.schemes])
         return (float(((fb * ffb) / ub).sum() / peak),
                 float(sum(s.h_n) + sum(s.h_m)),
@@ -277,9 +301,11 @@ def _price_plan(work: TrainWorkload, chip: ChipSpec, n_chips: int,
     t_pipe = (n_micro + pp - 1) * (t_fwd + t_bwd)
     bubble = (pp - 1) * (t_fwd + t_bwd)
 
-    # DP gradient all-reduce on the per-chip weight shard, overlapped with bwd
+    # DP gradient all-reduce on the per-chip weight shard, overlapped with
+    # bwd (skipped entirely for serving workloads: replicas sync nothing)
     w_chip = work.total_weight_bytes() / (tp * pp)
-    t_dp = dp_topo.all_reduce(w_chip, list(range(len(dp_topo.dims)))) if dp > 1 else 0.0
+    t_dp = (dp_topo.all_reduce(w_chip, list(range(len(dp_topo.dims))))
+            if dp > 1 and work.dp_allreduce else 0.0)
     exposed_dp = max(0.0, t_dp - n_micro * t_bwd_comp * 0.5)
     iter_time = t_pipe + exposed_dp
 
@@ -315,6 +341,52 @@ def _price_plan(work: TrainWorkload, chip: ChipSpec, n_chips: int,
         tp_topology=tp_topo, dp_topology=dp_topo)
 
 
+def candidate_plans(work: TrainWorkload, system: SystemSpec,
+                    max_tp: int | None = None,
+                    max_pp: int | None = None,
+                    allow_subdivision: bool = True,
+                    fixed: tuple[int, int, int] | None = None,
+                    execution: str = "dataflow") -> list[InterChipPlan]:
+    """Every memory-independent candidate plan of the (TP, PP, DP) ×
+    dim-assignment search, in canonical enumeration order.
+
+    This is the *plan phase* of the search: all discrete solves run (and
+    memo-cache) here, while the memory part of the system only enters in
+    :func:`select_plan`. The DSE grid pairs each (chip, net, topology) with
+    several memory variants — all of them share one candidate enumeration.
+    """
+    n_chips = system.n_chips
+    combos = ([fixed] if fixed is not None
+              else enumerate_parallelism(n_chips, max_tp, max_pp))
+    out: list[InterChipPlan] = []
+    for tp, pp, dp in combos:
+        if pp > work.n_layers + 2:
+            continue
+        for tp_topo, pp_topo, dp_topo in _cached_subdivide(
+                system.topology, (tp, pp, dp), allow_subdivision):
+            plan = memo_plan(work, system.chip, n_chips, tp, pp, dp,
+                             tp_topo, pp_topo, dp_topo, execution)
+            if plan is not None:
+                out.append(plan)
+    return out
+
+
+def select_plan(cands: Sequence[InterChipPlan],
+                capacity: float) -> InterChipPlan | None:
+    """Pick the winner for one memory variant: first candidate minimizing
+    (infeasible, iter_time) lexicographically — exactly the serial search's
+    first-strictly-smaller acceptance order."""
+    best: InterChipPlan | None = None
+    bkey: tuple[bool, float] | None = None
+    for plan in cands:
+        key = (plan.per_chip_mem_bytes > capacity, plan.iter_time)
+        if best is None or key < bkey:
+            best, bkey = plan, key
+    if best is None:
+        return None
+    return dataclasses.replace(best, feasible=not bkey[0])
+
+
 def optimize_inter_chip(work: TrainWorkload, system: SystemSpec,
                         max_tp: int | None = None,
                         max_pp: int | None = None,
@@ -322,28 +394,18 @@ def optimize_inter_chip(work: TrainWorkload, system: SystemSpec,
                         fixed: tuple[int, int, int] | None = None,
                         execution: str = "dataflow") -> InterChipPlan:
     """Search the (TP, PP, DP) × dim-assignment space; return the best
-    *feasible* plan by iteration time (ties → higher utilization)."""
-    n_chips = system.n_chips
-    combos = ([fixed] if fixed is not None
-              else enumerate_parallelism(n_chips, max_tp, max_pp))
-    best: InterChipPlan | None = None
-    for tp, pp, dp in combos:
-        if pp > work.n_layers + 2:
-            continue
-        for tp_topo, pp_topo, dp_topo in _subdivide_dims(
-                system.topology, (tp, pp, dp), allow_subdivision):
-            plan = evaluate_plan(work, system, tp, pp, dp,
-                                 tp_topo, pp_topo, dp_topo, execution)
-            if plan is None:
-                continue
-            if best is None:
-                best = plan
-                continue
-            key = (not plan.feasible, plan.iter_time)
-            bkey = (not best.feasible, best.iter_time)
-            if key < bkey:
-                best = plan
+    *feasible* plan by iteration time (ties → first in enumeration order).
+
+    Composed of :func:`candidate_plans` (memory-independent plan phase) +
+    :func:`select_plan` (the per-memory argmin) so phased sweeps can share
+    one enumeration across the memory variants of a system.
+    """
+    best = select_plan(
+        candidate_plans(work, system, max_tp=max_tp, max_pp=max_pp,
+                        allow_subdivision=allow_subdivision, fixed=fixed,
+                        execution=execution),
+        system.memory.capacity)
     if best is None:
-        raise ValueError(f"no (tp,pp,dp) decomposition of {n_chips} chips fits "
-                         f"{work.name}")
+        raise ValueError(f"no (tp,pp,dp) decomposition of {system.n_chips} "
+                         f"chips fits {work.name}")
     return best

@@ -43,7 +43,7 @@ import numpy as np
 from ..systems.chips import ChipSpec, MemorySpec
 from .graph import DataflowGraph
 from .solver import bounds_to_assign, minsum_partition
-from .utilization import kernel_utilization
+from .utilization import kernel_utilizations
 
 
 @dataclasses.dataclass
@@ -64,6 +64,17 @@ class IntraChipResult:
         tot = {"compute": self.t_comp.sum(), "memory": self.t_mem.sum(),
                "network": self.t_net.sum()}
         return max(tot, key=tot.get)
+
+    def sums(self) -> tuple[float, float, float]:
+        """(Σt_comp, Σt_mem, Σt_net) over partitions, as Python floats.
+
+        This is the canonical reduction (``np.ndarray.sum`` pairwise order)
+        the plan phase stores in ``pricing.PlanVector`` — the price phase
+        never re-reduces the ragged per-partition arrays, so batched and
+        scalar breakdowns are bit-identical by construction.
+        """
+        return (float(self.t_comp.sum()), float(self.t_mem.sum()),
+                float(self.t_net.sum()))
 
 
 @dataclasses.dataclass
@@ -93,7 +104,7 @@ def _make_env(graph: DataflowGraph, chip: ChipSpec, mem: MemorySpec,
     kernels = [graph.kernels[i] for i in order]
     f = np.array([k.flops for k in kernels])
     w = np.array([k.weight_bytes for k in kernels])
-    u = np.array([kernel_utilization(k) for k in kernels])
+    u = kernel_utilizations(kernels)
     hn_full = np.zeros(n) if h_n is None else np.asarray(h_n, dtype=float)
     hn = hn_full[order]
     pos = {ki: p for p, ki in enumerate(order)}

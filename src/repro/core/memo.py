@@ -40,25 +40,35 @@ from typing import Any, Callable, Hashable
 
 @dataclasses.dataclass(frozen=True)
 class CacheStats:
-    """Hit/miss counters, total and per key space."""
+    """Hit/miss/size counters, total and per key space."""
 
     hits: int
     misses: int
     entries: int
-    by_space: dict[str, tuple[int, int]]  # space -> (hits, misses)
+    by_space: dict[str, tuple[int, int, int]]  # space -> (hits, misses, size)
 
     @property
     def hit_rate(self) -> float:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
 
+    def rows(self) -> list[dict]:
+        """Per-space stats as table/JSON rows (bench_dse reporting)."""
+        out = [{"space": s, "hits": h, "misses": m, "entries": e,
+                "hit_rate": h / (h + m) if (h + m) else 0.0}
+               for s, (h, m, e) in sorted(self.by_space.items())]
+        out.append({"space": "TOTAL", "hits": self.hits,
+                    "misses": self.misses, "entries": self.entries,
+                    "hit_rate": self.hit_rate})
+        return out
+
 
 class SolveCache:
     """A namespaced memo cache with hit/miss accounting.
 
     ``space`` partitions keys by solve family ("sharding", "minmax",
-    "intra", "plan") so stats are attributable and clearing can stay global
-    and simple. Entries are evicted wholesale once ``max_entries`` is
+    "intra", "plan", "subdiv") so stats are attributable and clearing can
+    stay global and simple. Entries are evicted wholesale once ``max_entries`` is
     exceeded (the sweep working set is far below the default bound; the
     guard only protects pathological long-running processes).
     """
@@ -87,12 +97,14 @@ class SolveCache:
         return value
 
     def stats(self) -> CacheStats:
-        spaces = set(self._hits) | set(self._misses)
+        sizes: Counter[str] = Counter(space for space, _ in self._data)
+        spaces = set(self._hits) | set(self._misses) | set(sizes)
         return CacheStats(
             hits=sum(self._hits.values()),
             misses=sum(self._misses.values()),
             entries=len(self._data),
-            by_space={s: (self._hits[s], self._misses[s]) for s in spaces})
+            by_space={s: (self._hits[s], self._misses[s], sizes[s])
+                      for s in spaces})
 
     def clear(self) -> None:
         self._data.clear()

@@ -1,0 +1,307 @@
+"""Batched design-point pricing — the *price* phase of the DSE pipeline.
+
+The evaluation of one design point splits into two phases (see
+:mod:`repro.core.dse` for the pipeline view):
+
+* **plan** — the discrete solves (TP sharding, PP min-max partition,
+  intra-chip fusion DP, the (tp, pp, dp) × dim-assignment argmin). These are
+  combinatorial, memo-cached in :mod:`repro.core.memo`, and emit one
+  :class:`PlanVector` per design point: a flat record of every numeric
+  parameter the closed-form cost model needs.
+* **price** — this module. All roofline / latency / utilization / cost /
+  power terms (the Eq. 7 per-stage timing, the 1F1B iteration composition,
+  the intra-chip derate and compute/memory/network breakdown, the §VI.C
+  cost- and power-efficiency metrics) are *pure arithmetic* over stacked
+  ``PlanVector`` columns, so one :func:`price_plans` call prices an entire
+  design grid as array ops instead of Python scalar-by-scalar.
+
+Backends
+--------
+``numpy``
+    The default. Stacked float64 columns, elementwise ops.
+``jax``
+    ``jax.vmap`` of the same formula over the batch axis, run under
+    ``jax.experimental.enable_x64`` so every op is IEEE double. Eager vmap
+    on CPU is **bit-identical** to the numpy backend (and hence to the
+    scalar reference); pass ``jit=True`` for an XLA-compiled variant that
+    may fuse multiplies into FMAs and differ in the last ulp — fast, but
+    not certified element-identical.
+``auto``
+    ``$DFMODEL_PRICING_BACKEND`` if set, else ``numpy``.
+
+Because every formula is elementwise over the batch axis, pricing a batch
+of one is bit-identical to pricing the point inside a batch of 80 — which
+is what lets the streaming sweep (:meth:`DSEEngine.sweep_iter`) price
+groups incrementally while staying certified against the serial path.
+
+The certification itself lives in ``tests/test_pricing.py``: batched numpy
+and jax pricing reproduce :func:`price_plan_scalar` — a literal
+transcription of the serial path's arithmetic in
+``interchip._price_plan`` / ``dse._to_point`` / ``costpower`` — bit for
+bit, and the phased sweep reproduces ``dse.sweep(phased=False)`` row for
+row.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Iterable, Mapping, Sequence
+
+import numpy as np
+
+BACKENDS = ("numpy", "jax")
+
+#: Environment override consumed by ``default_backend()`` (and therefore by
+#: ``DSEEngine(pricing_backend="auto")`` and ``tools/ci.sh``).
+BACKEND_ENV_VAR = "DFMODEL_PRICING_BACKEND"
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanVector:
+    """Numeric parameters of one planned design point (array-of-structs row).
+
+    Emitted by the plan phase (``dse.plan_design_cells``); consumed in
+    stacked column form by :func:`price_plans`. Every field is a float so
+    the whole record stacks into a dense float64 matrix; integer quantities
+    (tp, pp, n_micro, …) are exact in float64 far beyond any realistic
+    system size.
+    """
+
+    # Eq. 7 critical-stage terms of the winning inter-chip plan
+    t_comp_stage: float
+    t_net_stage: float
+    t_p2p: float
+    t_dp: float                  # DP gradient all-reduce time (0 if dp == 1)
+    n_micro: float
+    tp: float
+    pp: float
+    # workload multipliers
+    bwd_flop_mult: float
+    bwd_comm_mult: float
+    opt_mult: float              # optimizer bytes per parameter byte
+    model_flops: float           # useful FLOPs per iteration
+    weight_bytes: float          # total model weight bytes (unsharded)
+    act_bytes_layer: float       # Σ tensor bytes of one unsharded layer
+    layers_per_stage: float      # ceil(n_layers / pp)
+    stage_layers: float          # max(1, ceil(n_layers / pp)) — derate denom
+    # system constants
+    n_chips: float
+    chip_peak: float             # per-chip peak FLOP/s
+    mem_capacity: float
+    sys_peak_flops: float        # n_chips × chip_peak (system property)
+    sys_price: float
+    sys_power: float
+    # intra-chip pass reductions (partition-summed, canonical np order)
+    intra_comp: float
+    intra_mem: float
+    intra_net: float
+    intra_total: float           # Σ per-partition critical time
+
+
+FIELDS: tuple[str, ...] = tuple(
+    f.name for f in dataclasses.fields(PlanVector))
+
+
+def stack_plans(vectors: Sequence[PlanVector]) -> dict[str, np.ndarray]:
+    """Array-of-structs → struct-of-arrays: one float64 column per field."""
+    return {name: np.array([getattr(v, name) for v in vectors],
+                           dtype=np.float64)
+            for name in FIELDS}
+
+
+def default_backend() -> str:
+    env = os.environ.get(BACKEND_ENV_VAR, "").strip().lower()
+    return env if env in BACKENDS else "numpy"
+
+
+def available_backends() -> list[str]:
+    out = ["numpy"]
+    try:
+        import jax  # noqa: F401
+
+        out.append("jax")
+    except Exception:
+        pass
+    return out
+
+
+# --- the pricing formula (generic over the array namespace) ------------------
+# Operation ORDER here is load-bearing: it mirrors the serial scalar path
+# (interchip._price_plan → dse._to_point → costpower.*_efficiency) expression
+# by expression, which is what makes the batched result bit-identical to the
+# reference. Don't re-associate products or fold constants.
+def _price(xp, v: Mapping[str, object]) -> dict[str, object]:
+    # Eq. 7 forward stage time + 1F1B backward composition
+    t_fwd = xp.maximum(xp.maximum(v["t_comp_stage"], v["t_net_stage"]),
+                       v["t_p2p"])
+    t_bwd_comp = v["t_comp_stage"] * v["bwd_flop_mult"]
+    t_bwd_net = v["t_net_stage"] * (v["bwd_flop_mult"] * v["bwd_comm_mult"])
+    t_bwd = xp.maximum(xp.maximum(t_bwd_comp, t_bwd_net), v["t_p2p"])
+    t_pipe = (v["n_micro"] + v["pp"] - 1.0) * (t_fwd + t_bwd)
+    exposed_dp = xp.maximum(0.0, v["t_dp"] - v["n_micro"] * t_bwd_comp * 0.5)
+    iter_time = t_pipe + exposed_dp
+    util_inter = v["model_flops"] / (iter_time * v["n_chips"] * v["chip_peak"])
+
+    # per-chip memory footprint + capacity check
+    w_bytes = v["weight_bytes"] / (v["tp"] * v["pp"])
+    opt_bytes = w_bytes * v["opt_mult"]
+    act_per_layer = v["act_bytes_layer"] / v["tp"]
+    act_bytes = (act_per_layer * v["layers_per_stage"]
+                 * xp.minimum(v["n_micro"], v["pp"]))
+    mem = w_bytes + opt_bytes + act_bytes
+    feasible = mem <= v["mem_capacity"]
+
+    # memory-bound derate from the intra-chip pass (dse._to_point)
+    derate_on = (v["intra_total"] > 0) & (t_fwd > 0)
+    safe_intra = xp.where(derate_on, v["intra_total"], 1.0)
+    per_layer_inter = (xp.maximum(v["t_comp_stage"], v["t_net_stage"])
+                       / v["stage_layers"])
+    derate = xp.minimum(1.0, per_layer_inter / safe_intra)
+    utilization = xp.where(derate_on, util_inter * derate, util_inter)
+
+    # compute/memory/network latency breakdown
+    total = v["intra_comp"] + v["intra_mem"] + v["intra_net"]
+    nz = total != 0.0
+    safe_total = xp.where(nz, total, 1.0)
+    zero = total * 0.0
+    frac_compute = xp.where(nz, v["intra_comp"] / safe_total, zero)
+    frac_memory = xp.where(nz, v["intra_mem"] / safe_total, zero)
+    frac_network = xp.where(nz, v["intra_net"] / safe_total, zero)
+
+    # §VI.C efficiency metrics
+    cost_eff = utilization * v["sys_peak_flops"] / v["sys_price"]
+    power_eff = utilization * v["sys_peak_flops"] / v["sys_power"]
+
+    return {
+        "utilization": utilization,
+        "cost_eff": cost_eff,
+        "power_eff": power_eff,
+        "frac_compute": frac_compute,
+        "frac_memory": frac_memory,
+        "frac_network": frac_network,
+        "iter_time": iter_time,
+        "util_inter": util_inter,
+        "per_chip_mem_bytes": mem,
+        "feasible": feasible,
+    }
+
+
+def _dispatch(formula, cols: Mapping[str, np.ndarray], backend: str,
+              jit: bool) -> dict[str, np.ndarray]:
+    """Run an elementwise batch formula on the chosen backend.
+
+    ``formula(xp, row_or_cols)`` must be pure elementwise arithmetic over
+    the batch axis — that is what makes the jax path (``vmap`` under
+    ``enable_x64``) bit-identical to numpy, and a batch of one identical
+    to the same point inside a batch of 80.
+    """
+    if backend == "auto":
+        backend = default_backend()
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown pricing backend {backend!r}; "
+                         f"expected one of {BACKENDS}")
+    n = len(next(iter(cols.values()))) if cols else 0
+    if n == 0 or backend == "numpy":
+        out = formula(np, cols)
+    else:
+        import jax
+        from jax.experimental import enable_x64
+
+        with enable_x64():
+            import jax.numpy as jnp
+
+            fn = jax.vmap(lambda row: formula(jnp, row))
+            if jit:
+                fn = jax.jit(fn)
+            # materialize inside the x64 scope
+            out = {k: np.asarray(a) for k, a in fn(
+                {k: jnp.asarray(a, dtype=jnp.float64)
+                 for k, a in cols.items()}).items()}
+    return {k: np.asarray(a) for k, a in out.items()}
+
+
+def price_plans(plans: Sequence[PlanVector] | Mapping[str, np.ndarray],
+                backend: str = "auto",
+                jit: bool = False) -> dict[str, np.ndarray]:
+    """Price a batch of plan vectors; returns a dict of per-point columns.
+
+    ``plans`` is either a sequence of :class:`PlanVector` or pre-stacked
+    columns from :func:`stack_plans`. Output keys: ``utilization``,
+    ``cost_eff``, ``power_eff``, ``frac_compute|memory|network``,
+    ``iter_time``, ``util_inter``, ``per_chip_mem_bytes``, ``feasible``.
+    """
+    cols = plans if isinstance(plans, Mapping) else stack_plans(plans)
+    return _dispatch(_price, cols, backend, jit)
+
+
+def price_plan_scalar(v: PlanVector) -> dict[str, float]:
+    """Reference scalar pricing — a literal transcription of the serial
+    path's arithmetic (``interchip._price_plan`` + ``dse._to_point`` +
+    ``costpower``). The batched backends are certified bit-identical to
+    this in ``tests/test_pricing.py``."""
+    t_fwd = max(v.t_comp_stage, v.t_net_stage, v.t_p2p)
+    t_bwd_comp = v.t_comp_stage * v.bwd_flop_mult
+    t_bwd_net = v.t_net_stage * (v.bwd_flop_mult * v.bwd_comm_mult)
+    t_bwd = max(t_bwd_comp, t_bwd_net, v.t_p2p)
+    t_pipe = (v.n_micro + v.pp - 1.0) * (t_fwd + t_bwd)
+    exposed_dp = max(0.0, v.t_dp - v.n_micro * t_bwd_comp * 0.5)
+    iter_time = t_pipe + exposed_dp
+    util_inter = v.model_flops / (iter_time * v.n_chips * v.chip_peak)
+
+    w_bytes = v.weight_bytes / (v.tp * v.pp)
+    opt_bytes = w_bytes * v.opt_mult
+    act_per_layer = v.act_bytes_layer / v.tp
+    act_bytes = act_per_layer * v.layers_per_stage * min(v.n_micro, v.pp)
+    mem = w_bytes + opt_bytes + act_bytes
+
+    util = util_inter
+    if v.intra_total > 0 and t_fwd > 0:
+        per_layer_inter = max(v.t_comp_stage, v.t_net_stage) / v.stage_layers
+        derate = min(1.0, per_layer_inter / v.intra_total)
+        util = util_inter * derate
+
+    total = v.intra_comp + v.intra_mem + v.intra_net
+    return {
+        "utilization": util,
+        "cost_eff": util * v.sys_peak_flops / v.sys_price,
+        "power_eff": util * v.sys_peak_flops / v.sys_power,
+        "frac_compute": v.intra_comp / total if total else 0.0,
+        "frac_memory": v.intra_mem / total if total else 0.0,
+        "frac_network": v.intra_net / total if total else 0.0,
+        "iter_time": iter_time,
+        "util_inter": util_inter,
+        "per_chip_mem_bytes": mem,
+        "feasible": mem <= v.mem_capacity,
+    }
+
+
+# --- batched roofline (Fig 18 / dry-run terms over many cells) ---------------
+def _roofline(xp, c: Mapping[str, object]) -> dict[str, object]:
+    t_compute = c["hlo_flops"] / (c["chips"] * c["peak_flops"])
+    t_memory = c["hlo_bytes"] / (c["chips"] * c["hbm_bw"])
+    t_collective = c["collective_bytes"] / (c["chips"] * c["link_bw"])
+    t_bound = xp.maximum(xp.maximum(t_compute, t_memory), t_collective)
+    zero = t_bound * 0.0
+    denom = t_bound * c["chips"] * c["peak_flops"]
+    safe_denom = xp.where(denom != 0.0, denom, 1.0)
+    frac = xp.where(denom != 0.0, c["model_flops"] / safe_denom, zero)
+    nz_flops = c["hlo_flops"] != 0.0
+    safe_flops = xp.where(nz_flops, c["hlo_flops"], 1.0)
+    useful = xp.where(nz_flops, c["model_flops"] / safe_flops, zero)
+    return {"t_compute": t_compute, "t_memory": t_memory,
+            "t_collective": t_collective, "t_bound": t_bound,
+            "roofline_fraction": frac, "useful_flop_ratio": useful}
+
+
+def batched_roofline(cols: Mapping[str, np.ndarray],
+                     backend: str = "auto",
+                     jit: bool = False) -> dict[str, np.ndarray]:
+    """Batched :class:`repro.core.roofline.RooflineTerms` evaluation.
+
+    ``cols`` holds stacked float64 columns ``hlo_flops``, ``hlo_bytes``,
+    ``collective_bytes``, ``chips``, ``model_flops``, ``peak_flops``,
+    ``hbm_bw``, ``link_bw`` (see ``roofline.stack_terms``). Returns the
+    per-cell time terms, bound, roofline fraction and useful-FLOP ratio —
+    element-identical to the scalar ``RooflineTerms`` properties.
+    """
+    return _dispatch(_roofline, cols, backend, jit)

@@ -122,3 +122,16 @@ class RooflineTerms:
             "useful_ratio": self.useful_flop_ratio,
             "roofline_fraction": self.roofline_fraction,
         }
+
+
+def stack_terms(terms: "list[RooflineTerms] | tuple[RooflineTerms, ...]"
+                ) -> dict:
+    """Stack RooflineTerms into the float64 columns consumed by
+    ``repro.core.pricing.batched_roofline`` (one array op prices every
+    (arch × shape × mesh) cell instead of a property call per cell)."""
+    import numpy as np
+
+    cols = ("hlo_flops", "hlo_bytes", "collective_bytes", "chips",
+            "model_flops", "peak_flops", "hbm_bw", "link_bw")
+    return {c: np.array([getattr(t, c) for t in terms], dtype=np.float64)
+            for c in cols}

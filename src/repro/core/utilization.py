@@ -49,3 +49,12 @@ def kernel_utilization(kernel: Kernel) -> float:
         m, k, n = kernel.gemm_dims
         return max(0.05, min(ceil, gemm_utilization(m, k, n) * ceil / 0.95))
     return ceil
+
+
+def kernel_utilizations(kernels) -> "np.ndarray":
+    """Vectorized u_c over a kernel sequence — the form the plan phase's
+    per-layer compute model consumes (one array op instead of a Python
+    loop per candidate plan)."""
+    import numpy as np
+
+    return np.array([kernel_utilization(k) for k in kernels])

@@ -249,6 +249,48 @@ def gpt_workload(s: LLMShape, global_batch: int,
     )
 
 
+def mamba_workload(s: LLMShape, global_batch: int, microbatch: int = 1,
+                   d_state: int = 128, expand: int = 2):
+    """Mamba2/SSD training workload: attention-free layers, same embedding
+    and LM-head blocks as the transformer setups."""
+    from ..core.interchip import TrainWorkload
+    ms = dataclasses.replace(s, batch=microbatch)
+    return TrainWorkload(
+        name=s.name,
+        layer_graph=mamba_layer_graph(ms, d_state=d_state, expand=expand),
+        n_layers=s.n_layers,
+        global_batch=global_batch,
+        microbatch=microbatch,
+        pre_graph=embedding_graph(ms),
+        post_graph=lm_head_graph(ms),
+    )
+
+
+def decode_workload(s: LLMShape, kv_len: int, global_batch: int,
+                    microbatch: int = 1):
+    """Serving/decode-phase workload: one token per request against a
+    ``kv_len`` KV cache, ``microbatch`` requests per pipeline microbatch.
+
+    Inference-only semantics: no backward pass (``bwd_flop_mult=0``), no
+    optimizer state, and no DP gradient all-reduce — DP replicas serve
+    disjoint request streams. ``global_batch`` is the number of requests
+    per 'iteration' (one decode step across the serving batch).
+    """
+    from ..core.interchip import TrainWorkload
+    ms = dataclasses.replace(s, batch=microbatch)
+    return TrainWorkload(
+        name=f"{s.name}_decode",
+        layer_graph=decode_layer_graph(ms, kv_len),
+        n_layers=s.n_layers,
+        global_batch=global_batch,
+        microbatch=microbatch,
+        bwd_flop_mult=0.0,
+        bwd_comm_mult=0.0,
+        optimizer_bytes_per_param_byte=0.0,
+        dp_allreduce=False,
+    )
+
+
 # --- named shapes from the paper ---------------------------------------------
 GPT3_175B = LLMShape("gpt3_175b", 96, 12288, 96, 96, 4 * 12288, 50257,
                      seq=2048, gated=False)

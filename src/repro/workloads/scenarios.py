@@ -1,12 +1,12 @@
-"""Named DSE scenarios — the paper's four workload families as first-class
-sweeps (§VI.C: GPT3-1T, DLRM-793B, HPL-5M², FFT-1T).
+"""Named DSE scenarios — the paper's four workload families (§VI.C:
+GPT3-1T, DLRM-793B, HPL-5M², FFT-1T) plus MoE, Mamba2 and serving/decode
+sweeps as first-class scenarios.
 
 Each scenario bundles a *picklable* workload builder (a module-level
 function, so ``DSEEngine`` can ship it across process boundaries even under
 spawn semantics) with the sweep grid the paper uses for that family, plus a
 ``smoke`` variant small enough for tests and CI: fewer chips per system, a
-reduced grid, and — for the LLM family — GPT3-175B, which still fits a
-64-chip machine.
+reduced grid, and a smaller model that still fits a 64-chip machine.
 
 Consumed by ``benchmarks/bench_dse.py`` and ``examples/dse_scenario.py``:
 
@@ -19,13 +19,28 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable
 
+from ..configs.mamba2_130m import CONFIG as MAMBA2_130M
+from ..configs.mamba2_130m import SMOKE as MAMBA2_SMOKE
+from ..configs.qwen3_moe_235b import CONFIG as QWEN3_MOE_235B
+from ..configs.qwen3_moe_235b import SMOKE as QWEN3_MOE_SMOKE
 from ..core.dse_engine import SweepSpec
 from ..core.interchip import TrainWorkload
 from ..systems.system import SystemSpec
 from .dlrm import dlrm_workload
 from .fft import fft_workload
 from .hpl import hpl_workload
-from .llm import GPT3_1T, GPT3_175B, gpt_workload
+from .llm import (GPT3_1T, GPT3_175B, LLAMA3_70B, LLAMA_68M, LLMShape,
+                  decode_workload, gpt_workload, mamba_workload)
+
+
+def _shape_from_config(cfg) -> LLMShape:
+    """Adapt a ``repro.models.config.ModelConfig`` (the runtime's config
+    record) to the graph builders' ``LLMShape``."""
+    return LLMShape(name=cfg.name, n_layers=cfg.n_layers,
+                    d_model=cfg.d_model, n_heads=cfg.n_heads,
+                    n_kv_heads=cfg.n_kv_heads, d_ff=cfg.d_ff,
+                    vocab=cfg.vocab, d_head=cfg.head_dim,
+                    moe_experts=cfg.moe_experts, moe_top_k=cfg.moe_top_k)
 
 
 # --- module-level builders (picklable; signature: system -> TrainWorkload) ---
@@ -49,6 +64,41 @@ def hpl_work(system: SystemSpec) -> TrainWorkload:
 
 def fft_work(system: SystemSpec) -> TrainWorkload:
     return fft_workload()
+
+
+def moe_work(system: SystemSpec) -> TrainWorkload:
+    return gpt_workload(_shape_from_config(QWEN3_MOE_235B),
+                        global_batch=512, microbatch=1)
+
+
+def moe_smoke_work(system: SystemSpec) -> TrainWorkload:
+    return gpt_workload(_shape_from_config(QWEN3_MOE_SMOKE),
+                        global_batch=64, microbatch=1)
+
+
+def mamba2_work(system: SystemSpec) -> TrainWorkload:
+    cfg = MAMBA2_130M
+    return mamba_workload(_shape_from_config(cfg), global_batch=512,
+                          microbatch=1, d_state=cfg.ssm_state,
+                          expand=cfg.ssm_expand)
+
+
+def mamba2_smoke_work(system: SystemSpec) -> TrainWorkload:
+    cfg = MAMBA2_SMOKE
+    return mamba_workload(_shape_from_config(cfg), global_batch=64,
+                          microbatch=1, d_state=cfg.ssm_state,
+                          expand=cfg.ssm_expand)
+
+
+def serving_work(system: SystemSpec) -> TrainWorkload:
+    # LLaMA3-70B decode: 32 requests per microbatch against an 8K KV cache
+    return decode_workload(LLAMA3_70B, kv_len=8192, global_batch=512,
+                           microbatch=32)
+
+
+def serving_smoke_work(system: SystemSpec) -> TrainWorkload:
+    return decode_workload(LLAMA_68M, kv_len=2048, global_batch=64,
+                           microbatch=8)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,6 +152,24 @@ SCENARIOS: dict[str, Scenario] = {
         description="1T-point distributed FFT (Figs 16-17)",
         work_fn=fft_work, spec=SweepSpec(max_tp=None),
         smoke_spec=SweepSpec(max_tp=None, **_SMOKE_GRID)),
+    "moe": Scenario(
+        name="moe",
+        description="Qwen3-MoE-235B training (128 experts, top-8)",
+        work_fn=moe_work, spec=SweepSpec(max_tp=64),
+        smoke_work_fn=moe_smoke_work,
+        smoke_spec=SweepSpec(max_tp=64, **_SMOKE_GRID)),
+    "mamba2": Scenario(
+        name="mamba2",
+        description="Mamba2-130M SSD training (attention-free)",
+        work_fn=mamba2_work, spec=SweepSpec(max_tp=64),
+        smoke_work_fn=mamba2_smoke_work,
+        smoke_spec=SweepSpec(max_tp=64, **_SMOKE_GRID)),
+    "serving": Scenario(
+        name="serving",
+        description="LLaMA3-70B decode serving (batch 32, 8K KV cache)",
+        work_fn=serving_work, spec=SweepSpec(max_tp=64),
+        smoke_work_fn=serving_smoke_work,
+        smoke_spec=SweepSpec(max_tp=64, **_SMOKE_GRID)),
 }
 
 

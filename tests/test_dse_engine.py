@@ -11,7 +11,8 @@ import numpy as np
 import pytest
 
 from repro.core import (DSEEngine, SweepSpec, cache_stats, caching_disabled,
-                        clear_caches, pareto_frontier, sweep)
+                        clear_caches, pareto_frontier, stop_after_feasible,
+                        sweep)
 from repro.core.dse import design_grid
 from repro.core.solver import minmax_partition, minmax_partition_scalar
 from repro.workloads.llm import LLAMA_68M, gpt_workload
@@ -99,15 +100,20 @@ def test_minmax_extra_objective_matches_returned_split():
 
 
 # ------------------------------ determinism ----------------------------------
+def _scalar_reference(spec: SweepSpec):
+    """The serial scalar path (plan+price per point, no batching)."""
+    return sweep(_tiny_work, n_chips=spec.n_chips, chips=spec.chips,
+                 topologies=spec.topologies, mem_net=spec.mem_net,
+                 max_tp=spec.max_tp, phased=False)
+
+
 def test_parallel_engine_matches_serial_sweep_exactly():
-    """Parallel sweep must reproduce the serial row list bit-for-bit —
-    same order, same floats — on a 2-chip × 2-topology smoke grid."""
+    """Parallel phased sweep must reproduce the scalar row list
+    bit-for-bit — same order, same floats — on a 2-chip × 2-topology
+    smoke grid."""
     clear_caches()
     with caching_disabled():
-        serial = sweep(_tiny_work, n_chips=SMOKE_SPEC.n_chips,
-                       chips=SMOKE_SPEC.chips,
-                       topologies=SMOKE_SPEC.topologies,
-                       mem_net=SMOKE_SPEC.mem_net, max_tp=SMOKE_SPEC.max_tp)
+        serial = _scalar_reference(SMOKE_SPEC)
     clear_caches()
     engine = DSEEngine(parallel=True, max_workers=2)
     par = engine.sweep(_tiny_work, SMOKE_SPEC)
@@ -120,11 +126,105 @@ def test_serial_engine_matches_sweep_exactly():
     engine = DSEEngine(parallel=False)
     pts = engine.sweep(_tiny_work, SMOKE_SPEC)
     with caching_disabled():
-        ref = sweep(_tiny_work, n_chips=SMOKE_SPEC.n_chips,
-                    chips=SMOKE_SPEC.chips,
-                    topologies=SMOKE_SPEC.topologies,
-                    mem_net=SMOKE_SPEC.mem_net, max_tp=SMOKE_SPEC.max_tp)
+        ref = _scalar_reference(SMOKE_SPEC)
     assert [p.row() for p in pts] == [p.row() for p in ref]
+
+
+def test_perpoint_engine_matches_phased_engine():
+    """The retained PR 1 per-point path and the phased path are the same
+    sweep, bit for bit."""
+    clear_caches()
+    perpoint = DSEEngine(parallel=True, max_workers=2, phased=False)
+    a = perpoint.sweep(_tiny_work, SMOKE_SPEC)
+    clear_caches()
+    phased = DSEEngine(parallel=True, max_workers=2, phased=True)
+    b = phased.sweep(_tiny_work, SMOKE_SPEC)
+    assert [p.row() for p in a] == [p.row() for p in b]
+
+
+@pytest.mark.parametrize("method", ["spawn", "forkserver"])
+def test_engine_explicit_mp_context_matches_serial(method):
+    """Spawn-context plumbing: an explicit non-fork start method ships
+    picklable tasks and still reproduces the scalar reference exactly."""
+    import multiprocessing
+
+    if method not in multiprocessing.get_all_start_methods():
+        pytest.skip(f"{method} not available on this platform")
+    clear_caches()
+    with caching_disabled():
+        ref = _scalar_reference(SMOKE_SPEC)
+    clear_caches()
+    engine = DSEEngine(parallel=True, max_workers=2, mp_context=method)
+    assert engine._start_method() == method
+    pts = engine.sweep(_tiny_work, SMOKE_SPEC)
+    assert [p.row() for p in pts] == [p.row() for p in ref]
+
+
+def test_engine_rejects_unknown_mp_context():
+    with pytest.raises(ValueError):
+        DSEEngine(mp_context="teleport")
+
+
+# ------------------------------ streaming ------------------------------------
+def test_sweep_iter_delivers_every_index_exactly_once():
+    clear_caches()
+    engine = DSEEngine(parallel=True, max_workers=2)
+    items = list(engine.sweep_iter(_tiny_work, SMOKE_SPEC))
+    grid = SMOKE_SPEC.grid()
+    assert sorted(it.index for it in items) == list(range(len(grid)))
+    assert all(it.cell == grid[it.index] for it in items)
+    # re-ordered by grid index, the streamed points equal the batch sweep
+    ordered = [it.point for it in sorted(items, key=lambda it: it.index)
+               if it.point is not None]
+    ref = _scalar_reference(SMOKE_SPEC)
+    assert [p.row() for p in ordered] == [p.row() for p in ref]
+
+
+def test_sweep_iter_early_exit_stops_submission():
+    """With a serial engine the grid is planned lazily: stopping after the
+    first item must leave the rest of the grid untouched."""
+    calls = []
+
+    def counting_work(system):
+        calls.append(system.name)
+        return _tiny_work(system)
+
+    clear_caches()
+    engine = DSEEngine(parallel=False)
+    items = list(engine.sweep_iter(counting_work, SMOKE_SPEC,
+                                   stop=lambda item: True))
+    assert len(items) == 1
+    assert len(calls) == 1 < len(SMOKE_SPEC.grid())
+
+
+def test_sweep_iter_midstream_pool_failure_keeps_exactly_once():
+    """If the pool dies after streaming some items, the serial fallback
+    must deliver only the remaining indices — never duplicates."""
+    clear_caches()
+    engine = DSEEngine(parallel=True, max_workers=2)
+    grid = SMOKE_SPEC.grid()
+
+    def flaky_parallel_iter(work_fn, spec, g, stop):
+        for item in engine._serial_iter(work_fn, spec,
+                                        [(0, g[0]), (3, g[3])], stop):
+            yield item
+        raise OSError("worker died")
+
+    engine._parallel_iter = flaky_parallel_iter
+    with pytest.warns(RuntimeWarning, match="streaming serially"):
+        items = list(engine.sweep_iter(_tiny_work, SMOKE_SPEC))
+    assert sorted(it.index for it in items) == list(range(len(grid)))
+
+
+def test_sweep_iter_stop_after_feasible():
+    clear_caches()
+    engine = DSEEngine(parallel=False)
+    items = list(engine.sweep_iter(_tiny_work, SMOKE_SPEC,
+                                   stop=stop_after_feasible(2)))
+    feas = [it for it in items
+            if it.point is not None and it.point.plan.feasible]
+    assert len(feas) == 2
+    assert len(items) < len(SMOKE_SPEC.grid())
 
 
 # ------------------------------ memo cache -----------------------------------
@@ -243,12 +343,22 @@ def test_pareto_points_mutually_nondominated():
 
 # --------------------------- scenario registry -------------------------------
 def test_scenario_registry_lists_all_families():
-    assert set(scenario_names()) == {"llm", "dlrm", "hpl", "fft"}
+    assert set(scenario_names()) == {"llm", "dlrm", "hpl", "fft",
+                                     "moe", "mamba2", "serving"}
     with pytest.raises(KeyError):
         get_scenario("nope")
 
 
-@pytest.mark.parametrize("name", ["llm", "dlrm", "hpl", "fft"])
+def test_serving_scenario_is_inference_only():
+    sc = get_scenario("serving", smoke=True)
+    work = sc.work_fn(None)
+    assert work.bwd_flop_mult == 0.0
+    assert work.optimizer_bytes_per_param_byte == 0.0
+    assert work.dp_allreduce is False
+
+
+@pytest.mark.parametrize("name", ["llm", "dlrm", "hpl", "fft",
+                                  "moe", "mamba2", "serving"])
 def test_smoke_scenarios_sweep_and_have_nonempty_frontier(name):
     engine = DSEEngine()
     res = engine.sweep_scenario(name, smoke=True)

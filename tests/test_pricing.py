@@ -1,0 +1,220 @@
+"""Pricing-phase certification: the batched numpy and jax backends must
+reproduce the scalar reference *bit for bit* — on random plan vectors
+(seeded generation, with a hypothesis variant when the dev extra is
+installed, per the PR 1 convention) and end-to-end (phased sweep vs the
+serial scalar sweep across chips/memories/topologies)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import clear_caches
+from repro.core.dse import sweep
+from repro.core.pricing import (FIELDS, PlanVector, batched_roofline,
+                                price_plan_scalar, price_plans, stack_plans)
+from repro.core.roofline import RooflineTerms, stack_terms
+from repro.workloads.llm import LLAMA_68M, gpt_workload
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+OUT_KEYS = ("utilization", "cost_eff", "power_eff", "frac_compute",
+            "frac_memory", "frac_network", "iter_time", "util_inter",
+            "per_chip_mem_bytes", "feasible")
+
+
+# --------------------------- vector generation -------------------------------
+def _random_vector(rng: np.random.Generator) -> PlanVector:
+    """A random-but-plausible plan vector, with the degenerate branches
+    (no DP comm, no p2p, empty intra pass, inference-only multipliers)
+    exercised at random."""
+    tp = float(2 ** rng.integers(0, 7))
+    pp = float(2 ** rng.integers(0, 5))
+    n_layers = int(rng.integers(1, 130))
+    lps = -(-n_layers // int(pp))  # ceil
+    return PlanVector(
+        t_comp_stage=float(rng.uniform(1e-6, 1.0)),
+        t_net_stage=float(rng.uniform(0.0, 1.0)),
+        t_p2p=float(rng.choice([0.0, rng.uniform(0.0, 0.1)])),
+        t_dp=float(rng.choice([0.0, rng.uniform(0.0, 0.5)])),
+        n_micro=float(rng.integers(1, 1025)),
+        tp=tp, pp=pp,
+        bwd_flop_mult=float(rng.choice([0.0, 2.0])),
+        bwd_comm_mult=float(rng.choice([0.0, 1.0])),
+        opt_mult=float(rng.choice([0.0, 8.0])),
+        model_flops=float(rng.uniform(1e12, 1e21)),
+        weight_bytes=float(rng.uniform(1e6, 1e13)),
+        act_bytes_layer=float(rng.uniform(1e3, 1e10)),
+        layers_per_stage=float(lps),
+        stage_layers=float(max(1, lps)),
+        n_chips=float(2 ** rng.integers(0, 11)),
+        chip_peak=float(rng.uniform(1e13, 1e16)),
+        mem_capacity=float(rng.uniform(1e9, 1e12)),
+        sys_peak_flops=float(rng.uniform(1e15, 1e19)),
+        sys_price=float(rng.uniform(1e5, 1e9)),
+        sys_power=float(rng.uniform(1e3, 1e7)),
+        intra_comp=float(rng.choice([0.0, rng.uniform(0.0, 1.0)])),
+        intra_mem=float(rng.choice([0.0, rng.uniform(0.0, 1.0)])),
+        intra_net=float(rng.choice([0.0, rng.uniform(0.0, 1.0)])),
+        intra_total=float(rng.choice([0.0, rng.uniform(1e-9, 1.0)])),
+    )
+
+
+def _assert_bit_identical(vectors, backend, **kw):
+    got = price_plans(vectors, backend=backend, **kw)
+    ref = [price_plan_scalar(v) for v in vectors]
+    for key in OUT_KEYS:
+        col = got[key]
+        want = np.array([r[key] for r in ref])
+        if key == "feasible":
+            assert col.dtype == np.bool_ or col.dtype == bool
+            assert col.tolist() == want.astype(bool).tolist()
+            continue
+        # bit-for-bit: compare the raw float64 payloads, not approx
+        assert col.dtype == np.float64
+        mismatch = col.view(np.uint64) != want.view(np.uint64)
+        assert not mismatch.any(), (
+            f"{backend} backend: {key} differs at "
+            f"{np.nonzero(mismatch)[0][:5]}")
+
+
+# ------------------------- seeded property tests -----------------------------
+def test_batched_numpy_matches_scalar_seeded():
+    rng = np.random.default_rng(0)
+    vectors = [_random_vector(rng) for _ in range(400)]
+    _assert_bit_identical(vectors, "numpy")
+
+
+def test_batched_jax_matches_scalar_seeded():
+    pytest.importorskip("jax")
+    rng = np.random.default_rng(1)
+    vectors = [_random_vector(rng) for _ in range(200)]
+    _assert_bit_identical(vectors, "jax")
+
+
+def test_jax_jit_backend_is_close_but_not_certified():
+    """jit=True lets XLA fuse into FMAs — allowed to differ in the last
+    ulps, must still agree to rounding."""
+    pytest.importorskip("jax")
+    rng = np.random.default_rng(2)
+    vectors = [_random_vector(rng) for _ in range(50)]
+    got = price_plans(vectors, backend="jax", jit=True)
+    ref = [price_plan_scalar(v) for v in vectors]
+    for key in OUT_KEYS:
+        if key == "feasible":
+            continue
+        np.testing.assert_allclose(
+            got[key], np.array([r[key] for r in ref]), rtol=1e-12)
+
+
+def test_stack_plans_shape_and_empty_batch():
+    rng = np.random.default_rng(3)
+    vectors = [_random_vector(rng) for _ in range(7)]
+    cols = stack_plans(vectors)
+    assert set(cols) == set(FIELDS)
+    assert all(c.shape == (7,) and c.dtype == np.float64
+               for c in cols.values())
+    assert price_plans([]) == {} or all(
+        len(v) == 0 for v in price_plans([]).values())
+
+
+def test_unknown_backend_rejected():
+    rng = np.random.default_rng(4)
+    with pytest.raises(ValueError):
+        price_plans([_random_vector(rng)], backend="cuda")
+
+
+# ------------------------ hypothesis variant (dev extra) ---------------------
+if HAVE_HYPOTHESIS:
+    finite = st.floats(min_value=1e-9, max_value=1e18, allow_nan=False,
+                       allow_infinity=False)
+    maybe_zero = st.one_of(st.just(0.0), finite)
+
+    @settings(max_examples=200, deadline=None)
+    @given(t_comp=finite, t_net=maybe_zero, t_p2p=maybe_zero,
+           t_dp=maybe_zero, n_micro=st.integers(1, 4096),
+           tp=st.sampled_from([1, 2, 4, 8, 16, 32, 64]),
+           pp=st.sampled_from([1, 2, 4, 8, 16]),
+           bwd=st.sampled_from([0.0, 1.0, 2.0, 3.0]),
+           intra_total=maybe_zero, w=finite, cap=finite)
+    def test_pricing_property_hypothesis(t_comp, t_net, t_p2p, t_dp,
+                                         n_micro, tp, pp, bwd, intra_total,
+                                         w, cap):
+        v = PlanVector(
+            t_comp_stage=t_comp, t_net_stage=t_net, t_p2p=t_p2p, t_dp=t_dp,
+            n_micro=float(n_micro), tp=float(tp), pp=float(pp),
+            bwd_flop_mult=bwd, bwd_comm_mult=1.0, opt_mult=8.0,
+            model_flops=1e18, weight_bytes=w, act_bytes_layer=w / 7.0,
+            layers_per_stage=3.0, stage_layers=3.0, n_chips=64.0,
+            chip_peak=1e15, mem_capacity=cap, sys_peak_flops=6.4e16,
+            sys_price=1e7, sys_power=1e5, intra_comp=t_comp / 3.0,
+            intra_mem=t_net / 5.0 if t_net else 0.0, intra_net=0.0,
+            intra_total=intra_total)
+        _assert_bit_identical([v], "numpy")
+
+
+# ----------------------- end-to-end sweep certification ----------------------
+def _tiny_work(system):
+    return gpt_workload(LLAMA_68M, global_batch=64, microbatch=1)
+
+
+_GRID = dict(n_chips=16,
+             chips=("H100", "TPUv4", "SN30", "WSE2"),
+             topologies=("torus2d", "dgx2"),
+             mem_net=(("DDR", "PCIe"), ("HBM", "PCIe"), ("HBM", "NVLink")),
+             max_tp=16)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_phased_sweep_rows_identical_to_scalar(backend):
+    """The acceptance property: batched pricing returns DesignPoint.row()
+    dicts element-identical to the serial scalar sweep, across every chip
+    and memory of the grid."""
+    if backend == "jax":
+        pytest.importorskip("jax")
+    clear_caches()
+    ref = sweep(_tiny_work, phased=False, **_GRID)
+    clear_caches()
+    phased = sweep(_tiny_work, phased=True, pricing_backend=backend, **_GRID)
+    assert len(phased) == len(ref) > 0
+    assert [p.row() for p in phased] == [p.row() for p in ref]
+
+
+# ------------------------------ batched roofline -----------------------------
+def test_batched_roofline_matches_scalar_terms():
+    rng = np.random.default_rng(5)
+    terms = [RooflineTerms(name=f"cell{i}", chips=int(2 ** rng.integers(0, 10)),
+                           hlo_flops=float(rng.uniform(1e12, 1e18)),
+                           hlo_bytes=float(rng.uniform(1e9, 1e15)),
+                           collective_bytes=float(
+                               rng.choice([0.0, rng.uniform(1e6, 1e13)])),
+                           model_flops=float(rng.uniform(1e12, 1e18)))
+             for i in range(100)]
+    got = batched_roofline(stack_terms(terms))
+    for key, attr in [("t_compute", "t_compute"), ("t_memory", "t_memory"),
+                      ("t_collective", "t_collective"), ("t_bound", "t_bound"),
+                      ("roofline_fraction", "roofline_fraction"),
+                      ("useful_flop_ratio", "useful_flop_ratio")]:
+        want = np.array([getattr(t, attr) for t in terms])
+        assert (got[key].view(np.uint64) == want.view(np.uint64)).all(), key
+
+
+def test_batched_roofline_jax_matches_numpy():
+    pytest.importorskip("jax")
+    rng = np.random.default_rng(6)
+    terms = [RooflineTerms(name=f"c{i}", chips=8,
+                           hlo_flops=float(rng.uniform(1e12, 1e18)),
+                           hlo_bytes=float(rng.uniform(1e9, 1e15)),
+                           collective_bytes=float(rng.uniform(1e6, 1e13)),
+                           model_flops=float(rng.uniform(1e12, 1e18)))
+             for i in range(32)]
+    cols = stack_terms(terms)
+    a = batched_roofline(cols, backend="numpy")
+    b = batched_roofline(cols, backend="jax")
+    for key in a:
+        assert (a[key].view(np.uint64) == b[key].view(np.uint64)).all(), key

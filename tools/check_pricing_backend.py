@@ -1,0 +1,37 @@
+"""CI gate: the phased smoke sweep must reproduce the scalar reference
+bit-for-bit on the pricing backend named by $DFMODEL_PRICING_BACKEND
+(jax skips gracefully when the container lacks it).
+
+  PYTHONPATH=src DFMODEL_PRICING_BACKEND=jax python tools/check_pricing_backend.py
+"""
+import os
+import sys
+
+backend = os.environ.get("DFMODEL_PRICING_BACKEND", "numpy")
+if backend == "jax":
+    try:
+        import jax  # noqa: F401
+    except Exception:
+        print("pricing backend jax: SKIPPED (jax not installed)")
+        sys.exit(0)
+
+from repro.core import DSEEngine, clear_caches  # noqa: E402
+from repro.core.dse import sweep  # noqa: E402
+from repro.workloads.scenarios import get_scenario  # noqa: E402
+
+
+def main() -> None:
+    sc = get_scenario("llm", smoke=True)
+    s = sc.spec
+    clear_caches()
+    ref = sweep(sc.work_fn, n_chips=s.n_chips, chips=s.chips,
+                topologies=s.topologies, mem_net=s.mem_net, max_tp=s.max_tp,
+                phased=False)
+    pts = DSEEngine(parallel=False).sweep(sc.work_fn, s)  # backend from env
+    assert [p.row() for p in pts] == [p.row() for p in ref], \
+        f"pricing backend {backend} diverged from the scalar reference"
+    print(f"pricing backend {backend}: {len(pts)} points, rows identical OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -19,3 +19,11 @@ PYTHONPATH=src python -m pytest -x -q
 # smoke benches: exercises the DSE engine end-to-end (parallel sweep,
 # memo cache, Pareto frontier, serial-vs-engine row identity)
 PYTHONPATH=src python -m benchmarks.run --smoke
+
+# pricing backends: the phased smoke sweep must reproduce the scalar
+# reference bit-for-bit on BOTH batched backends (jax skips gracefully if
+# the container lacks it)
+for backend in numpy jax; do
+    PYTHONPATH=src DFMODEL_PRICING_BACKEND=$backend \
+        python tools/check_pricing_backend.py
+done
