@@ -102,12 +102,14 @@ def speedup_report(scenario_name: str = "llm", smoke: bool = True,
     Paths (all produce bit-identical ``DesignPoint.row()`` lists):
 
     * ``serial_uncached``   — scalar reference, every solve cold.
-    * ``serial_perpoint``   — PR 1 path: scalar per-point eval, memo cache.
-    * ``serial_phased``     — this PR, in-process: shared plan phase + one
-      batched pricing call.
-    * ``parallel_perpoint`` — PR 1 engine: per-point eval in a process pool.
-    * ``parallel_phased``   — this PR's engine default: plan groups in the
-      pool, batched pricing in the parent.
+    * ``serial_perpoint``   — per-point path: scalar eval, memo cache.
+    * ``serial_phased``     — in-process phased path: columnar candidate
+      selection (one batched argmin per system group) + one batched
+      pricing call.
+    * ``parallel_perpoint`` — per-point eval in a process pool.
+    * ``parallel_phased``   — the engine default: plan groups in the pool
+      shipping candidate matrices, batched selection-certify + pricing in
+      the parent.
     * ``*_warm``            — per-point vs phased serial re-sweeps on a hot
       cache (the re-pricing regime: memory/interconnect what-ifs over
       already-solved plans).

@@ -10,10 +10,15 @@ Public surface:
   roofline (Fig 18)   : HierPoint, RooflineTerms
   DSE (§VI.C)         : sweep, DesignPoint, DSEEngine, SweepSpec,
                         pareto_frontier (parallel+cached: dse_engine.py);
-                        plan phase: plan_design_cells → PlannedPoint;
+                        plan phase: plan_design_cells → PlannedPoint,
+                        plan_design_groups → PlannedGroup (candidate
+                        matrices shipped worker → parent);
                         streaming: DSEEngine.sweep_iter → SweepItem
-  pricing (batched)   : PlanVector, price_plans, price_plan_scalar,
-                        stack_plans, batched_roofline (numpy | jax.vmap)
+  candidates (columnar): CandidateSet, candidate_matrix, select_plans —
+                        the batched (tp, pp, dp) × dim-assignment argmin
+  pricing (batched)   : PlanVector, PlanMatrix, price_plans,
+                        price_plan_scalar, stack_plans, batched_roofline
+                        (numpy | jax.vmap | pallas interpret kernel)
   memo cache          : cache_stats, clear_caches, caching_disabled
   serving (§VIII)     : serving_sweep, speculative_throughput
   plan (runtime glue) : plan_for → MappingPlan consumed by repro.launch
@@ -25,18 +30,21 @@ from .sharding import Scheme, ShardingSolution, solve_sharding
 from .solver import (branch_and_bound, bounds_to_assign, design_space_size,
                      enumerate_parallelism, minmax_partition, minsum_partition)
 from .utilization import gemm_utilization, kernel_utilization
-from .interchip import InterChipPlan, TrainWorkload, optimize_inter_chip
+from .interchip import (CandidateSet, InterChipPlan, TrainWorkload,
+                        candidate_matrix, candidate_plans,
+                        optimize_inter_chip, select_plan, select_plans)
 from .intrachip import IntraChipResult, optimize_intra_chip
 from .roofline import (HierPoint, RooflineTerms, V5E_HBM_BW, V5E_ICI_BW,
                        V5E_PEAK_FLOPS)
 from .costpower import (cost_efficiency, power_efficiency, silicon_power_w,
                         silicon_price_usd)
-from .dse import (DesignPoint, PlannedPoint, design_grid, plan_design_cells,
-                  price_planned, sweep)
+from .dse import (DesignPoint, PlannedGroup, PlannedPoint, design_grid,
+                  plan_design_cells, plan_design_groups, price_planned,
+                  sweep)
 from .dse_engine import (DSEEngine, ScenarioResult, SweepItem, SweepSpec,
                          pareto_frontier, stop_after_feasible)
-from .pricing import (PlanVector, batched_roofline, price_plan_scalar,
-                      price_plans, stack_plans)
+from .pricing import (PlanMatrix, PlanVector, batched_roofline,
+                      price_plan_scalar, price_plans, stack_plans)
 from .memo import (CacheStats, SolveCache, cache_stats, caching_disabled,
                    clear_caches)
 from .serving import (ServingPoint, SpecDecodePoint, expected_accepted,
@@ -50,18 +58,19 @@ __all__ = [
     "branch_and_bound", "bounds_to_assign", "design_space_size",
     "enumerate_parallelism", "minmax_partition", "minsum_partition",
     "gemm_utilization", "kernel_utilization",
-    "InterChipPlan", "TrainWorkload", "optimize_inter_chip",
+    "CandidateSet", "InterChipPlan", "TrainWorkload", "candidate_matrix",
+    "candidate_plans", "optimize_inter_chip", "select_plan", "select_plans",
     "IntraChipResult", "optimize_intra_chip",
     "HierPoint", "RooflineTerms", "V5E_HBM_BW", "V5E_ICI_BW",
     "V5E_PEAK_FLOPS",
     "cost_efficiency", "power_efficiency", "silicon_power_w",
     "silicon_price_usd",
-    "DesignPoint", "PlannedPoint", "design_grid", "plan_design_cells",
-    "price_planned", "sweep",
+    "DesignPoint", "PlannedGroup", "PlannedPoint", "design_grid",
+    "plan_design_cells", "plan_design_groups", "price_planned", "sweep",
     "DSEEngine", "ScenarioResult", "SweepItem", "SweepSpec",
     "pareto_frontier", "stop_after_feasible",
-    "PlanVector", "batched_roofline", "price_plan_scalar", "price_plans",
-    "stack_plans",
+    "PlanMatrix", "PlanVector", "batched_roofline", "price_plan_scalar",
+    "price_plans", "stack_plans",
     "CacheStats", "SolveCache", "cache_stats", "caching_disabled",
     "clear_caches",
     "ServingPoint", "SpecDecodePoint", "expected_accepted", "serving_sweep",

@@ -9,14 +9,15 @@ Plan / price phases
 -------------------
 Evaluating a design point splits into two phases:
 
-* **plan** (:func:`plan_design_cells`) — the discrete solves: TP sharding,
-  PP min-max partition, the (tp, pp, dp) × dim-assignment argmin
-  (``interchip.candidate_plans`` + ``select_plan``) and the intra-chip
-  fusion DP. All of them memo-cache in ``repro.core.memo``; the phase emits
-  one compact :class:`repro.core.pricing.PlanVector` per grid cell. The
-  memory variants of a (chip, net, topology) system share a single
-  candidate enumeration — the plan solves are memory-independent except
-  for the capacity check and the intra-chip pass.
+* **plan** (:func:`plan_design_cells` / :func:`plan_design_groups`) — the
+  discrete solves: TP sharding, PP min-max partition and the intra-chip
+  fusion DP. The (tp, pp, dp) × dim-assignment argmin itself is *columnar*:
+  ``interchip.candidate_matrix`` stacks every candidate into a
+  :class:`repro.core.pricing.PlanMatrix` and ``interchip.select_plans``
+  runs one batched ``price_plans`` call + lexicographic argmin covering
+  every memory variant of the system. All solves memo-cache in
+  ``repro.core.memo``; the phase emits one compact
+  :class:`repro.core.pricing.PlanVector` per grid cell.
 * **price** (:func:`price_planned` → :func:`repro.core.pricing.price_plans`)
   — all closed-form roofline/latency/utilization/cost/power arithmetic,
   batched over the stacked plan vectors (numpy by default, ``jax.vmap``
@@ -74,10 +75,11 @@ from ..systems.topology import TOPOLOGIES
 from .costpower import (cost_efficiency, power_efficiency,
                         system_efficiency_terms)
 from .interchip import (InterChipPlan, TrainWorkload, _work_key,
-                        candidate_plans, optimize_inter_chip, select_plan)
+                        candidate_matrix, certify_winner_rows,
+                        optimize_inter_chip, select_plans, select_rows)
 from .intrachip import IntraChipResult, optimize_intra_chip
 from .memo import GLOBAL_CACHE
-from .pricing import PlanVector, price_plans
+from .pricing import PlanMatrix, PlanVector, default_backend, price_plans
 
 
 @dataclasses.dataclass
@@ -171,7 +173,8 @@ def sweep(work_fn: Callable[[SystemSpec], TrainWorkload],
     cells = design_grid(chips, mem_net, topologies)
     if phased:
         planned = plan_design_cells(work_fn, cells, n_chips, max_tp=max_tp,
-                                    max_pp=max_pp, execution=execution)
+                                    max_pp=max_pp, execution=execution,
+                                    pricing_backend=pricing_backend)
         return price_planned(planned, backend=pricing_backend)
     points: list[DesignPoint] = []
     for cell in cells:
@@ -281,38 +284,120 @@ def _plan_vector(work: TrainWorkload, system: SystemSpec,
         intra_total=intra.total_time)
 
 
+@dataclasses.dataclass
+class PlannedGroup:
+    """The plan-phase output for one (chip, net, topology) system group:
+    the columnar candidate space plus the per-memory-variant winners.
+
+    This is the record ``DSEEngine`` workers ship to the parent: the
+    candidate :class:`~repro.core.pricing.PlanMatrix` travels alongside the
+    selected :class:`PlannedPoint`\\ s so the parent can re-price every
+    candidate × memory variant in one batched call on its configured
+    backend and certify the workers' numpy argmin against it. When the
+    parent's backend *is* the numpy reference that re-pricing could never
+    disagree, so the engine asks workers not to ship the matrix
+    (``ship_matrix=False`` → an empty matrix travels; ``n_candidates``
+    still records the enumeration size).
+    """
+
+    indices: tuple[int, ...]            # positions into the caller's cells
+    capacities: tuple[float, ...]       # memory capacity per cell
+    matrix: PlanMatrix                  # candidate pricing columns (may be
+                                        # empty when not shipped)
+    n_candidates: int                   # size of the candidate enumeration
+    winner_rows: tuple[int, ...]        # candidate row per cell (-1: none)
+    planned: list[PlannedPoint | None]  # aligned with ``indices``
+
+
+def _group_cells(work_fn, cells: Sequence[GridCell], n_chips: int,
+                 execution: str):
+    """Group cell positions by shared candidate space (the memory variants
+    of one system); yields (cell positions, work, system-per-position)."""
+    systems = [build_system(cell, n_chips) for cell in cells]
+    works = [work_fn(system) for system in systems]
+    groups: dict[tuple, list[int]] = {}
+    for i, (work, system) in enumerate(zip(works, systems)):
+        gkey = (_work_key(work), system.chip, system.n_chips,
+                system.topology, execution)
+        groups.setdefault(gkey, []).append(i)
+    return [(idxs, works[idxs[0]], [systems[i] for i in idxs])
+            for idxs in groups.values()]
+
+
+def plan_design_groups(work_fn: Callable[[SystemSpec], TrainWorkload],
+                       cells: Sequence[GridCell], n_chips: int,
+                       max_tp: int | None = 64, max_pp: int | None = None,
+                       execution: str = "auto",
+                       pricing_backend: str = "numpy",
+                       ship_matrix: bool = True) -> list[PlannedGroup]:
+    """Plan phase emitting one :class:`PlannedGroup` per system group.
+
+    Per group: one columnar candidate enumeration
+    (``interchip.candidate_matrix``), one batched selection covering every
+    memory variant (``interchip.select_plans`` — a single ``price_plans``
+    call + lexicographic argmin per capacity), then the intra-chip pass
+    and full :class:`~repro.core.pricing.PlanVector` for each winner only.
+
+    Winners are always selected on the **numpy reference** columns. A
+    non-numpy ``pricing_backend`` prices the same candidate matrix a
+    second time and must reproduce the reference argmin row-for-row
+    (:func:`interchip.certify_winner_rows`) — so a drifting backend can
+    never silently change a winner. ``ship_matrix=False`` replaces the
+    matrix in the emitted groups with an empty one (the engine's
+    numpy-parent path, which would never read it).
+    """
+    backend = (default_backend() if pricing_backend == "auto"
+               else pricing_backend)
+    out: list[PlannedGroup] = []
+    for idxs, work, systems in _group_cells(work_fn, cells, n_chips,
+                                            execution):
+        cands = candidate_matrix(work, systems[0], max_tp=max_tp,
+                                 max_pp=max_pp, execution=execution)
+        caps = tuple(s.memory.capacity for s in systems)
+        plans = select_plans(cands, caps)        # numpy reference winners
+        rows, _ = select_rows(cands, caps)       # cached priced columns
+        if len(cands) and backend != "numpy":
+            check = cands.priced(backend)
+            certify_winner_rows(check["iter_time"],
+                                check["per_chip_mem_bytes"], caps, rows,
+                                backend)
+        planned: list[PlannedPoint | None] = []
+        for pos, system, plan in zip(idxs, systems, plans):
+            if plan is None:
+                planned.append(None)
+                continue
+            intra = _intra_refine(work, system, plan, execution)
+            planned.append(PlannedPoint(cells[pos], system, plan,
+                                        _plan_vector(work, system, plan,
+                                                     intra)))
+        out.append(PlannedGroup(
+            indices=tuple(idxs), capacities=caps,
+            matrix=cands.matrix if ship_matrix else PlanMatrix.concat([]),
+            n_candidates=len(cands),
+            winner_rows=tuple(rows), planned=planned))
+    return out
+
+
 def plan_design_cells(work_fn: Callable[[SystemSpec], TrainWorkload],
                       cells: Sequence[GridCell], n_chips: int,
                       max_tp: int | None = 64, max_pp: int | None = None,
-                      execution: str = "auto"
+                      execution: str = "auto",
+                      pricing_backend: str = "numpy"
                       ) -> list[PlannedPoint | None]:
     """Plan phase over a list of grid cells (output aligned to ``cells``).
 
     Cells whose (workload, chip, n_chips, topology) coincide — the memory
-    variants of one system — share a single candidate enumeration; only
-    the per-memory argmin, capacity check and intra-chip pass run per
-    cell. ``None`` marks an undecomposable cell, mirroring
-    :func:`evaluate_design_point`.
+    variants of one system — share a single columnar candidate enumeration
+    and one batched selection call (:func:`plan_design_groups`); only the
+    capacity check and intra-chip pass run per cell. ``None`` marks an
+    undecomposable cell, mirroring :func:`evaluate_design_point`.
     """
-    cand_cache: dict = {}
-    out: list[PlannedPoint | None] = []
-    for cell in cells:
-        system = build_system(cell, n_chips)
-        work = work_fn(system)
-        gkey = (_work_key(work), system.chip, system.n_chips,
-                system.topology, execution)
-        cands = cand_cache.get(gkey)
-        if cands is None:
-            cands = candidate_plans(work, system, max_tp=max_tp,
-                                    max_pp=max_pp, execution=execution)
-            cand_cache[gkey] = cands
-        plan = select_plan(cands, system.memory.capacity)
-        if plan is None:
-            out.append(None)
-            continue
-        intra = _intra_refine(work, system, plan, execution)
-        out.append(PlannedPoint(cell, system, plan,
-                                _plan_vector(work, system, plan, intra)))
+    out: list[PlannedPoint | None] = [None] * len(cells)
+    for group in plan_design_groups(work_fn, cells, n_chips, max_tp=max_tp,
+                                    max_pp=max_pp, execution=execution,
+                                    pricing_backend=pricing_backend):
+        for pos, planned in zip(group.indices, group.planned):
+            out[pos] = planned
     return out
 
 

@@ -3,15 +3,19 @@
 The engine evaluates the same design grid as the serial reference
 :func:`repro.core.dse.sweep`, but
 
-* **phase-split**: workers run only the *plan* phase (the discrete solves,
-  grouped so the memory variants of each (chip, net, topology) system share
-  one candidate enumeration) and ship back compact
-  :class:`repro.core.pricing.PlanVector` records; the parent then runs the
-  *price* phase — all closed-form roofline/latency/cost/power arithmetic —
-  as one batched array call (numpy by default, ``jax.vmap`` on request).
-  ``DSEEngine(phased=False)`` keeps the original per-point path (each
-  worker plans *and* prices one cell) as a baseline for
-  ``benchmarks/bench_dse.py``.
+* **phase-split & columnar**: workers run only the *plan* phase (the
+  discrete solves, grouped so the memory variants of each (chip, net,
+  topology) system share one candidate enumeration) and ship back
+  :class:`repro.core.dse.PlannedGroup` records — the candidate-level
+  :class:`repro.core.pricing.PlanMatrix` plus the per-memory winners. The
+  parent row-concatenates every shipped matrix, prices all candidates of
+  all memory variants in ONE batched ``price_plans`` call on the
+  configured backend (``jax.vmap`` / the pallas kernel) and certifies the
+  batched lexicographic argmin against the workers' numpy selection —
+  skipped when the backend resolves to numpy, the workers' own reference —
+  then batch-prices the winners' full vectors. ``DSEEngine(phased=False)``
+  keeps the original per-point path (each worker plans *and* prices one
+  cell) as a baseline for ``benchmarks/bench_dse.py``.
 * **in parallel**: design points are independent, so plan groups are
   evaluated by a ``concurrent.futures`` process pool. Results are reduced
   *by grid index* (a deterministic ordered reduce), so the output list —
@@ -52,10 +56,12 @@ from typing import Callable, Iterable, Iterator, Sequence
 
 from ..systems.system import SystemSpec
 from .dse import (DEFAULT_CHIPS, DEFAULT_MEM_NET, DEFAULT_TOPOLOGIES,
-                  DesignPoint, GridCell, PlannedPoint, design_grid,
-                  evaluate_design_point, plan_design_cells, price_planned)
-from .interchip import TrainWorkload
+                  DesignPoint, GridCell, PlannedGroup, PlannedPoint,
+                  design_grid, evaluate_design_point, plan_design_cells,
+                  plan_design_groups, price_planned)
+from .interchip import TrainWorkload, certify_winner_rows
 from .memo import GLOBAL_CACHE, caching_disabled
+from .pricing import PlanMatrix, price_plans
 
 
 @dataclasses.dataclass(frozen=True)
@@ -169,21 +175,34 @@ def _eval_args(args: tuple) -> DesignPoint | None:
                                  max_pp=max_pp, execution=execution)
 
 
-def _plan_group_index(idxs: tuple[int, ...]
-                      ) -> list[tuple[int, PlannedPoint | None]]:
+# Workers always select on the numpy reference backend (importing jax in a
+# worker would be waste). With a non-numpy parent backend they also ship
+# the candidate matrix so the parent can re-price it and certify the
+# argmin; a numpy parent could never disagree with them, so it asks for
+# lean groups (ship_matrix=False) instead of megabytes of unused IPC.
+def _remap_group(group: PlannedGroup,
+                 idxs: tuple[int, ...]) -> PlannedGroup:
+    """Re-key a group's cell positions to the parent's grid indices."""
+    return dataclasses.replace(
+        group, indices=tuple(idxs[p] for p in group.indices))
+
+
+def _plan_group_index(idxs: tuple[int, ...]) -> list[PlannedGroup]:
     ctx = _WORKER_CTX
     cells = [ctx["grid"][i] for i in idxs]
-    planned = plan_design_cells(ctx["work_fn"], cells, ctx["n_chips"],
+    groups = plan_design_groups(ctx["work_fn"], cells, ctx["n_chips"],
                                 max_tp=ctx["max_tp"], max_pp=ctx["max_pp"],
-                                execution=ctx["execution"])
-    return list(zip(idxs, planned))
+                                execution=ctx["execution"],
+                                ship_matrix=ctx["ship_matrix"])
+    return [_remap_group(g, idxs) for g in groups]
 
 
-def _plan_group_args(args: tuple) -> list[tuple[int, PlannedPoint | None]]:
-    work_fn, cells, idxs, n_chips, max_tp, max_pp, execution = args
-    planned = plan_design_cells(work_fn, cells, n_chips, max_tp=max_tp,
-                                max_pp=max_pp, execution=execution)
-    return list(zip(idxs, planned))
+def _plan_group_args(args: tuple) -> list[PlannedGroup]:
+    work_fn, cells, idxs, n_chips, max_tp, max_pp, execution, ship = args
+    groups = plan_design_groups(work_fn, cells, n_chips, max_tp=max_tp,
+                                max_pp=max_pp, execution=execution,
+                                ship_matrix=ship)
+    return [_remap_group(g, idxs) for g in groups]
 
 
 def _group_indices(grid: Sequence[GridCell]) -> list[tuple[int, ...]]:
@@ -229,9 +248,12 @@ class DSEEngine:
         one batched pricing call; ``False`` keeps the per-point path where
         each worker plans and prices a single cell.
     pricing_backend:
-        ``"numpy"``, ``"jax"``, or ``"auto"`` (env var
-        ``DFMODEL_PRICING_BACKEND``, else numpy) — forwarded to
-        :func:`repro.core.pricing.price_plans`.
+        ``"numpy"``, ``"jax"``, ``"pallas"`` (the interpret-mode Pallas
+        pricing kernel, :mod:`repro.kernels.pricing`), or ``"auto"`` (env
+        var ``DFMODEL_PRICING_BACKEND``, else numpy) — used for the
+        parent's batched candidate-selection and final pricing calls
+        (:func:`repro.core.pricing.price_plans`). Workers always select on
+        the numpy reference; the parent certifies its backend against them.
     """
 
     def __init__(self, max_workers: int | None = None,
@@ -252,6 +274,11 @@ class DSEEngine:
         self.mp_context = mp_context
         self.phased = phased
         self.pricing_backend = pricing_backend
+        #: Plan-phase accounting of the last parallel phased sweep:
+        #: {"groups", "candidates", "cells", "backend"} — the exactly-once
+        #: candidate-matrix shipping contract tests/test_dse_engine.py
+        #: asserts. ``None`` until a parallel phased sweep completes.
+        self.last_plan_stats: dict | None = None
 
     # -- core sweep ----------------------------------------------------------
     def sweep(self, work_fn: Callable[[SystemSpec], TrainWorkload],
@@ -262,6 +289,7 @@ class DSEEngine:
         ``repro.core.dse.sweep(work_fn, **spec fields, phased=False)``.
         """
         grid = spec.grid()
+        self.last_plan_stats = None
         if not self.phased:
             return self._sweep_perpoint(work_fn, spec, grid)
         planned: list[PlannedPoint | None] | None = None
@@ -274,10 +302,10 @@ class DSEEngine:
                               stacklevel=2)
         if planned is None:
             with self._cache_mode():
-                planned = plan_design_cells(work_fn, grid, spec.n_chips,
-                                            max_tp=spec.max_tp,
-                                            max_pp=spec.max_pp,
-                                            execution=spec.execution)
+                planned = plan_design_cells(
+                    work_fn, grid, spec.n_chips, max_tp=spec.max_tp,
+                    max_pp=spec.max_pp, execution=spec.execution,
+                    pricing_backend=self.pricing_backend)
         return price_planned(planned, backend=self.pricing_backend)
 
     def sweep_iter(self, work_fn: Callable[[SystemSpec], TrainWorkload],
@@ -446,16 +474,17 @@ class DSEEngine:
     def _plan_tasks(self, work_fn, spec: SweepSpec, grid):
         """(worker fn, payload per group, cleanup-needed) for the pool."""
         groups = _group_indices(grid)
+        ship = self._resolved_backend() != "numpy"
         method = self._start_method()
         if method != "fork":
             pickle.dumps(work_fn)
             payload = [(work_fn, [grid[i] for i in idxs], idxs, spec.n_chips,
-                        spec.max_tp, spec.max_pp, spec.execution)
+                        spec.max_tp, spec.max_pp, spec.execution, ship)
                        for idxs in groups]
             return _plan_group_args, payload, False
         _WORKER_CTX.update(work_fn=work_fn, grid=grid, n_chips=spec.n_chips,
                            max_tp=spec.max_tp, max_pp=spec.max_pp,
-                           execution=spec.execution)
+                           execution=spec.execution, ship_matrix=ship)
         return _plan_group_index, groups, True
 
     def _parallel_plan(self, work_fn, spec: SweepSpec, grid
@@ -469,23 +498,70 @@ class DSEEngine:
                 with cf.ProcessPoolExecutor(max_workers=workers,
                                             mp_context=self._mp_context()
                                             ) as pool:
-                    out: list[PlannedPoint | None] = [None] * len(grid)
-                    for pairs in pool.map(fn, payload):
-                        for i, planned in pairs:
-                            out[i] = planned
-                    return out
+                    groups = [g for result in pool.map(fn, payload)
+                              for g in result]
         finally:
             if used_ctx:
                 _WORKER_CTX.clear()
+        return self._finish_plan_groups(groups, len(grid))
+
+    def _finish_plan_groups(self, groups: list[PlannedGroup], n_cells: int
+                            ) -> list[PlannedPoint | None]:
+        """Reduce worker-shipped plan groups into a grid-aligned list.
+
+        With a non-numpy backend, the shipped candidate matrices are
+        row-concatenated and priced in ONE batched ``price_plans`` call —
+        every candidate of every memory variant of every system — and the
+        resulting per-group argmins are certified against the workers'
+        numpy selection before the winners are accepted. When the backend
+        resolves to numpy (the workers' own reference), re-pricing the
+        identical deterministic formula could never disagree, so the
+        duplicate whole-grid pass is skipped.
+        """
+        backend = self._resolved_backend()
+        live = [g for g in groups if len(g.matrix)]
+        if live and backend != "numpy":
+            big = PlanMatrix.concat([g.matrix for g in live])
+            priced = price_plans(big.cols, backend=backend)
+            off = 0
+            for g in live:
+                n = len(g.matrix)
+                self._verify_group_winners(
+                    priced["iter_time"][off:off + n],
+                    priced["per_chip_mem_bytes"][off:off + n], g)
+                off += n
+        out: list[PlannedPoint | None] = [None] * n_cells
+        for g in groups:
+            for i, planned in zip(g.indices, g.planned):
+                out[i] = planned
+        self.last_plan_stats = {
+            "groups": len(groups),
+            "candidates": sum(g.n_candidates for g in groups),
+            "cells": sum(len(g.indices) for g in groups),
+            "backend": backend,
+            "verified": backend != "numpy",
+        }
+        return out
+
+    def _resolved_backend(self) -> str:
+        from .pricing import default_backend
+
+        return (default_backend() if self.pricing_backend == "auto"
+                else self.pricing_backend)
+
+    def _verify_group_winners(self, iter_time, mem,
+                              group: PlannedGroup) -> None:
+        certify_winner_rows(iter_time, mem, group.capacities,
+                            group.winner_rows, self._resolved_backend())
 
     def _serial_iter(self, work_fn, spec: SweepSpec, cells, stop):
         """Lazily stream (index, cell) pairs in order."""
         with self._cache_mode():
             for i, cell in cells:
-                planned = plan_design_cells(work_fn, [cell], spec.n_chips,
-                                            max_tp=spec.max_tp,
-                                            max_pp=spec.max_pp,
-                                            execution=spec.execution)
+                planned = plan_design_cells(
+                    work_fn, [cell], spec.n_chips, max_tp=spec.max_tp,
+                    max_pp=spec.max_pp, execution=spec.execution,
+                    pricing_backend=self.pricing_backend)
                 pts = price_planned(planned, backend=self.pricing_backend)
                 item = SweepItem(i, cell, pts[0] if pts else None)
                 yield item
@@ -512,13 +588,13 @@ class DSEEngine:
                     done, pending = cf.wait(
                         pending, return_when=cf.FIRST_COMPLETED)
                     for fut in done:
-                        pairs = fut.result()
-                        for item in self._stream_group(grid, pairs):
-                            yield item
-                            if stop is not None and stop(item):
-                                for f in pending:
-                                    f.cancel()
-                                return
+                        for group in fut.result():
+                            for item in self._stream_group(grid, group):
+                                yield item
+                                if stop is not None and stop(item):
+                                    for f in pending:
+                                        f.cancel()
+                                    return
                         for task in queue:
                             pending.add(pool.submit(fn, task))
                             if len(pending) >= window:
@@ -528,7 +604,17 @@ class DSEEngine:
             if used_ctx:
                 _WORKER_CTX.clear()
 
-    def _stream_group(self, grid, pairs) -> list[SweepItem]:
+    def _stream_group(self, grid, group: PlannedGroup) -> list[SweepItem]:
+        # certify the worker's candidate argmin on a non-numpy parent
+        # backend, then price the group's winners (one batch per group —
+        # elementwise over the batch axis, so streamed values match a full
+        # sweep's bits)
+        if len(group.matrix) and self._resolved_backend() != "numpy":
+            priced = price_plans(group.matrix.cols,
+                                 backend=self.pricing_backend)
+            self._verify_group_winners(priced["iter_time"],
+                                       priced["per_chip_mem_bytes"], group)
+        pairs = list(zip(group.indices, group.planned))
         live = [(i, p) for i, p in pairs if p is not None]
         pts = price_planned([p for _, p in live],
                             backend=self.pricing_backend)

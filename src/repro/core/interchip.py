@@ -28,6 +28,7 @@ from ..systems.system import SystemSpec
 from ..systems.topology import Topology, TopologyDim
 from .graph import DataflowGraph
 from .memo import GLOBAL_CACHE
+from .pricing import PlanMatrix, PlanVector, price_plans
 from .sharding import ShardingSolution, solve_sharding
 from .solver import enumerate_parallelism, minmax_partition
 from .utilization import kernel_utilizations
@@ -341,6 +342,30 @@ def _price_plan(work: TrainWorkload, chip: ChipSpec, n_chips: int,
         tp_topology=tp_topo, dp_topology=dp_topo)
 
 
+def _enumerate_candidates(work: TrainWorkload, system: SystemSpec,
+                          max_tp: int | None, max_pp: int | None,
+                          allow_subdivision: bool,
+                          fixed: tuple[int, int, int] | None,
+                          execution: str
+                          ) -> list[tuple[tuple[int, int, int, int],
+                                          InterChipPlan]]:
+    """((tp, pp, dp, assignment-index), plan) pairs in canonical order."""
+    n_chips = system.n_chips
+    combos = ([fixed] if fixed is not None
+              else enumerate_parallelism(n_chips, max_tp, max_pp))
+    out: list[tuple[tuple[int, int, int, int], InterChipPlan]] = []
+    for tp, pp, dp in combos:
+        if pp > work.n_layers + 2:
+            continue
+        for a, (tp_topo, pp_topo, dp_topo) in enumerate(_cached_subdivide(
+                system.topology, (tp, pp, dp), allow_subdivision)):
+            plan = memo_plan(work, system.chip, n_chips, tp, pp, dp,
+                             tp_topo, pp_topo, dp_topo, execution)
+            if plan is not None:
+                out.append(((tp, pp, dp, a), plan))
+    return out
+
+
 def candidate_plans(work: TrainWorkload, system: SystemSpec,
                     max_tp: int | None = None,
                     max_pp: int | None = None,
@@ -354,28 +379,133 @@ def candidate_plans(work: TrainWorkload, system: SystemSpec,
     memo-cache) here, while the memory part of the system only enters in
     :func:`select_plan`. The DSE grid pairs each (chip, net, topology) with
     several memory variants — all of them share one candidate enumeration.
+    :func:`candidate_matrix` is the columnar form of the same enumeration.
     """
-    n_chips = system.n_chips
-    combos = ([fixed] if fixed is not None
-              else enumerate_parallelism(n_chips, max_tp, max_pp))
-    out: list[InterChipPlan] = []
-    for tp, pp, dp in combos:
-        if pp > work.n_layers + 2:
+    return [plan for _, plan in _enumerate_candidates(
+        work, system, max_tp, max_pp, allow_subdivision, fixed, execution)]
+
+
+def _candidate_vector(work: TrainWorkload, plan: InterChipPlan) -> PlanVector:
+    """The candidate-level pricing row: exactly the fields the selection
+    argmin consumes (``iter_time`` + ``per_chip_mem_bytes`` inputs, fed to
+    the same certified formula the winner's full vector goes through).
+    Fields the argmin never reads — the intra-chip terms, the system
+    cost/power constants — are neutral (0 / 1 / ∞) placeholders; the full
+    :class:`PlanVector` for the *winner* is built by ``dse._plan_vector``
+    after the intra-chip pass runs."""
+    layers_per_stage = math.ceil(work.n_layers / plan.pp)
+    return PlanVector(
+        t_comp_stage=plan.t_comp_stage,
+        t_net_stage=plan.t_net_stage,
+        t_p2p=plan.t_p2p_stage,
+        t_dp=plan.breakdown["dp_comm"],
+        n_micro=float(plan.n_micro),
+        tp=float(plan.tp),
+        pp=float(plan.pp),
+        bwd_flop_mult=work.bwd_flop_mult,
+        bwd_comm_mult=work.bwd_comm_mult,
+        opt_mult=work.optimizer_bytes_per_param_byte,
+        model_flops=1.0,
+        weight_bytes=work.total_weight_bytes(),
+        act_bytes_layer=sum(t.bytes_ for t in work.layer_graph.tensors),
+        layers_per_stage=float(layers_per_stage),
+        stage_layers=float(max(1, layers_per_stage)),
+        n_chips=1.0, chip_peak=1.0, mem_capacity=math.inf,
+        sys_peak_flops=1.0, sys_price=1.0, sys_power=1.0,
+        intra_comp=0.0, intra_mem=0.0, intra_net=0.0, intra_total=0.0)
+
+
+@dataclasses.dataclass
+class CandidateSet:
+    """The columnar candidate space of one (workload, chip, n_chips,
+    topology) search: the plan objects in canonical enumeration order plus
+    their stacked :class:`~repro.core.pricing.PlanMatrix`. Priced columns
+    are cached per backend so the memory variants of a system share one
+    batched pricing call."""
+
+    plans: list[InterChipPlan]
+    matrix: PlanMatrix
+    _priced: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    def __len__(self) -> int:
+        return len(self.plans)
+
+    def priced(self, backend: str = "numpy") -> dict[str, np.ndarray]:
+        """``price_plans`` over the candidate matrix (cached per backend)."""
+        out = self._priced.get(backend)
+        if out is None:
+            out = price_plans(self.matrix.cols, backend=backend)
+            self._priced[backend] = out
+        return out
+
+
+def candidate_matrix(work: TrainWorkload, system: SystemSpec,
+                     max_tp: int | None = None,
+                     max_pp: int | None = None,
+                     allow_subdivision: bool = True,
+                     fixed: tuple[int, int, int] | None = None,
+                     execution: str = "dataflow") -> CandidateSet:
+    """Columnar :func:`candidate_plans`: the same enumeration, emitted as a
+    :class:`CandidateSet` whose matrix rows are tagged with their
+    (tp, pp, dp, dim-assignment) coordinates. Memoised (space ``candmat``)
+    on the same structural key as the underlying plan solves, so a warm
+    re-sweep skips straight to the batched argmin."""
+    key = (_work_key(work), system.chip, system.n_chips,
+           system.topology, max_tp, max_pp, allow_subdivision, fixed,
+           execution)
+    return GLOBAL_CACHE.get_or_compute(
+        "candmat", key,
+        lambda: _build_candidate_set(work, system, max_tp, max_pp,
+                                     allow_subdivision, fixed, execution))
+
+
+def _build_candidate_set(work, system, max_tp, max_pp, allow_subdivision,
+                         fixed, execution) -> CandidateSet:
+    tagged = _enumerate_candidates(work, system, max_tp, max_pp,
+                                   allow_subdivision, fixed, execution)
+    return CandidateSet(
+        plans=[plan for _, plan in tagged],
+        matrix=PlanMatrix.from_vectors(
+            [_candidate_vector(work, plan) for _, plan in tagged],
+            [tag for tag, _ in tagged]))
+
+
+def winner_rows(iter_time: np.ndarray, mem: np.ndarray,
+                capacities: Sequence[float]) -> list[int]:
+    """The batched lexicographic argmin: per capacity, the first row
+    minimizing (per_chip_mem_bytes > capacity, iter_time).
+
+    ``np.argmin`` returns the *first* minimum, so ties resolve to the
+    lowest row — exactly the serial scan's first-strictly-smaller
+    acceptance order. Returns -1 per capacity when there are no rows.
+    """
+    n = len(iter_time)
+    out: list[int] = []
+    for cap in capacities:
+        if n == 0:
+            out.append(-1)
             continue
-        for tp_topo, pp_topo, dp_topo in _cached_subdivide(
-                system.topology, (tp, pp, dp), allow_subdivision):
-            plan = memo_plan(work, system.chip, n_chips, tp, pp, dp,
-                             tp_topo, pp_topo, dp_topo, execution)
-            if plan is not None:
-                out.append(plan)
+        feasible = np.nonzero(mem <= cap)[0]
+        pool = feasible if feasible.size else np.arange(n)
+        out.append(int(pool[np.argmin(iter_time[pool])]))
     return out
 
 
-def select_plan(cands: Sequence[InterChipPlan],
-                capacity: float) -> InterChipPlan | None:
-    """Pick the winner for one memory variant: first candidate minimizing
+def select_plan(cands: "CandidateSet | Sequence[InterChipPlan]",
+                capacity: float,
+                backend: str = "numpy") -> InterChipPlan | None:
+    """Pick the winner for one memory variant: the candidate minimizing
     (infeasible, iter_time) lexicographically — exactly the serial search's
-    first-strictly-smaller acceptance order."""
+    first-strictly-smaller acceptance order.
+
+    Given a :class:`CandidateSet` this is a batched argmin over
+    :func:`~repro.core.pricing.price_plans` output on ``backend`` (the
+    columnar hot path); given a plain plan sequence it is the scalar
+    reference scan over the plans' own priced fields, which the columnar
+    path is certified bit-identical to (``tests/test_interchip.py``).
+    """
+    if isinstance(cands, CandidateSet):
+        return select_plans(cands, [capacity], backend=backend)[0]
     best: InterChipPlan | None = None
     bkey: tuple[bool, float] | None = None
     for plan in cands:
@@ -385,6 +515,47 @@ def select_plan(cands: Sequence[InterChipPlan],
     if best is None:
         return None
     return dataclasses.replace(best, feasible=not bkey[0])
+
+
+def select_rows(cands: CandidateSet, capacities: Sequence[float],
+                backend: str = "numpy"
+                ) -> tuple[list[int], dict | None]:
+    """Winner candidate-row per capacity plus the priced columns used
+    (``None`` priced for an empty candidate set, rows all -1)."""
+    if not len(cands):
+        return [-1] * len(capacities), None
+    priced = cands.priced(backend)
+    return winner_rows(priced["iter_time"], priced["per_chip_mem_bytes"],
+                       capacities), priced
+
+
+def certify_winner_rows(iter_time: np.ndarray, mem: np.ndarray,
+                        capacities: Sequence[float],
+                        expected: Sequence[int], backend: str) -> None:
+    """The certify-or-die contract shared by the serial plan phase and
+    ``DSEEngine``: a non-reference backend's batched argmin must
+    reproduce the numpy reference's winner rows exactly."""
+    rows = winner_rows(iter_time, mem, capacities)
+    if list(rows) != list(expected):
+        raise RuntimeError(
+            f"pricing backend {backend!r} selected different candidates "
+            f"than the numpy reference ({rows} != {list(expected)}); "
+            f"the backend is not bit-identical")
+
+
+def select_plans(cands: CandidateSet, capacities: Sequence[float],
+                 backend: str = "numpy") -> list[InterChipPlan | None]:
+    """The per-memory-variant argmin for *every* capacity at once: one
+    batched ``price_plans`` call over the candidate matrix, then a
+    vectorized lexicographic argmin per capacity — the memory variants of
+    a system never price a candidate twice."""
+    rows, priced = select_rows(cands, capacities, backend)
+    if priced is None:
+        return [None] * len(capacities)
+    return [dataclasses.replace(
+                cands.plans[r],
+                feasible=bool(priced["per_chip_mem_bytes"][r] <= cap))
+            for r, cap in zip(rows, capacities)]
 
 
 def optimize_inter_chip(work: TrainWorkload, system: SystemSpec,
@@ -397,8 +568,9 @@ def optimize_inter_chip(work: TrainWorkload, system: SystemSpec,
     *feasible* plan by iteration time (ties → first in enumeration order).
 
     Composed of :func:`candidate_plans` (memory-independent plan phase) +
-    :func:`select_plan` (the per-memory argmin) so phased sweeps can share
-    one enumeration across the memory variants of a system.
+    the scalar :func:`select_plan` scan — this is the serial *reference*
+    path; phased sweeps go through :func:`candidate_matrix` +
+    :func:`select_plans` (the batched columnar argmin) instead.
     """
     best = select_plan(
         candidate_plans(work, system, max_tp=max_tp, max_pp=max_pp,

@@ -26,6 +26,12 @@ Backends
     scalar reference); pass ``jit=True`` for an XLA-compiled variant that
     may fuse multiplies into FMAs and differ in the last ulp — fast, but
     not certified element-identical.
+``pallas``
+    The same formula lowered as a Pallas kernel tiled over the batch
+    (candidate) axis — :mod:`repro.kernels.pricing`. Runs in interpret
+    mode on CPU (float64, bit-identical to numpy; the kernel package's
+    ``certify()`` harness proves it row by row) and is the lowering path
+    for pricing 10⁵-point candidate grids on an accelerator.
 ``auto``
     ``$DFMODEL_PRICING_BACKEND`` if set, else ``numpy``.
 
@@ -49,7 +55,7 @@ from typing import Iterable, Mapping, Sequence
 
 import numpy as np
 
-BACKENDS = ("numpy", "jax")
+BACKENDS = ("numpy", "jax", "pallas")
 
 #: Environment override consumed by ``default_backend()`` (and therefore by
 #: ``DSEEngine(pricing_backend="auto")`` and ``tools/ci.sh``).
@@ -109,6 +115,97 @@ def stack_plans(vectors: Sequence[PlanVector]) -> dict[str, np.ndarray]:
             for name in FIELDS}
 
 
+#: Column order of :attr:`PlanMatrix.tags` rows.
+TAG_FIELDS: tuple[str, ...] = ("tp", "pp", "dp", "assignment")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanMatrix:
+    """Stacked *candidate-level* plan vectors (struct-of-arrays).
+
+    One row per (tp, pp, dp) × dim-assignment candidate of an inter-chip
+    search, emitted by ``interchip.candidate_matrix``. ``cols`` holds one
+    float64 column per :class:`PlanVector` field; ``tags`` is an
+    ``(n, 4)`` int64 array of the search coordinates (:data:`TAG_FIELDS`
+    order — the dim-assignment entry indexes the candidate's position in
+    the subdivision list of its (tp, pp, dp) combo). Feed ``cols``
+    straight to :func:`price_plans`; the batched lexicographic argmin in
+    ``interchip.select_plan`` consumes the resulting ``iter_time`` /
+    ``per_chip_mem_bytes`` columns.
+    """
+
+    cols: Mapping[str, np.ndarray]
+    tags: np.ndarray
+
+    def __len__(self) -> int:
+        return int(self.tags.shape[0])
+
+    @classmethod
+    def from_vectors(cls, vectors: Sequence[PlanVector],
+                     tags: Sequence[tuple[int, int, int, int]]
+                     ) -> "PlanMatrix":
+        if len(vectors) != len(tags):
+            raise ValueError(f"{len(vectors)} vectors vs {len(tags)} tags")
+        return cls(stack_plans(vectors),
+                   np.asarray(tags, dtype=np.int64).reshape(len(tags), 4))
+
+    @staticmethod
+    def concat(matrices: Sequence["PlanMatrix"]) -> "PlanMatrix":
+        """Row-concatenate matrices (the engine's whole-grid pricing call)."""
+        if not matrices:
+            return PlanMatrix({name: np.empty(0) for name in FIELDS},
+                              np.empty((0, 4), dtype=np.int64))
+        return PlanMatrix(
+            {name: np.concatenate([m.cols[name] for m in matrices])
+             for name in FIELDS},
+            np.concatenate([m.tags for m in matrices], axis=0))
+
+
+def random_plan_vectors(n: int, seed: int = 0) -> list[PlanVector]:
+    """Seeded random-but-plausible plan vectors, with every degenerate
+    branch (no DP comm, no p2p, empty intra pass, inference-only
+    multipliers) exercised at random.
+
+    The single source of certification inputs: the seeded property tests
+    (``tests/test_pricing.py``) and the pallas kernel harness
+    (``repro.kernels.pricing.certify``) both draw from here, so every
+    backend is certified against the same input distribution.
+    """
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        tp = float(2 ** rng.integers(0, 7))
+        pp = float(2 ** rng.integers(0, 5))
+        n_layers = int(rng.integers(1, 130))
+        lps = -(-n_layers // int(pp))  # ceil
+        out.append(PlanVector(
+            t_comp_stage=float(rng.uniform(1e-6, 1.0)),
+            t_net_stage=float(rng.uniform(0.0, 1.0)),
+            t_p2p=float(rng.choice([0.0, rng.uniform(0.0, 0.1)])),
+            t_dp=float(rng.choice([0.0, rng.uniform(0.0, 0.5)])),
+            n_micro=float(rng.integers(1, 1025)),
+            tp=tp, pp=pp,
+            bwd_flop_mult=float(rng.choice([0.0, 2.0])),
+            bwd_comm_mult=float(rng.choice([0.0, 1.0])),
+            opt_mult=float(rng.choice([0.0, 8.0])),
+            model_flops=float(rng.uniform(1e12, 1e21)),
+            weight_bytes=float(rng.uniform(1e6, 1e13)),
+            act_bytes_layer=float(rng.uniform(1e3, 1e10)),
+            layers_per_stage=float(lps),
+            stage_layers=float(max(1, lps)),
+            n_chips=float(2 ** rng.integers(0, 11)),
+            chip_peak=float(rng.uniform(1e13, 1e16)),
+            mem_capacity=float(rng.uniform(1e9, 1e12)),
+            sys_peak_flops=float(rng.uniform(1e15, 1e19)),
+            sys_price=float(rng.uniform(1e5, 1e9)),
+            sys_power=float(rng.uniform(1e3, 1e7)),
+            intra_comp=float(rng.choice([0.0, rng.uniform(0.0, 1.0)])),
+            intra_mem=float(rng.choice([0.0, rng.uniform(0.0, 1.0)])),
+            intra_net=float(rng.choice([0.0, rng.uniform(0.0, 1.0)])),
+            intra_total=float(rng.choice([0.0, rng.uniform(1e-9, 1.0)]))))
+    return out
+
+
 def default_backend() -> str:
     env = os.environ.get(BACKEND_ENV_VAR, "").strip().lower()
     return env if env in BACKENDS else "numpy"
@@ -119,7 +216,7 @@ def available_backends() -> list[str]:
     try:
         import jax  # noqa: F401
 
-        out.append("jax")
+        out.extend(["jax", "pallas"])   # pallas interpret mode needs only jax
     except Exception:
         pass
     return out
@@ -203,6 +300,10 @@ def _dispatch(formula, cols: Mapping[str, np.ndarray], backend: str,
     n = len(next(iter(cols.values()))) if cols else 0
     if n == 0 or backend == "numpy":
         out = formula(np, cols)
+    elif backend == "pallas":
+        from ..kernels.pricing.ops import pallas_columns
+
+        out = pallas_columns(formula, cols)
     else:
         import jax
         from jax.experimental import enable_x64

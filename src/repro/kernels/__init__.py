@@ -9,14 +9,19 @@ maps to one of these kernels on TPU.
   ssd              — Mamba2 SSD intra-chunk kernel (scores·decay·values + chunk
                      state), the hot loop of the hybrid/ssm architectures.
   rmsnorm          — fused RMSNorm (+ optional residual add).
+  pricing          — the DSE price phase tiled over the candidate axis
+                     (interpret-mode float64, certified bit-identical to
+                     the scalar reference; ``pricing_backend="pallas"``).
 
-Every kernel ships ``ops.py`` (jit'd public wrapper with interpret fallback)
-and ``ref.py`` (pure-jnp oracle used by the allclose sweeps in tests/).
+Every kernel ships ``ops.py`` (public wrapper; jit'd with interpret fallback
+for the compute kernels, interpret-mode certified for pricing) and ``ref.py``
+(the oracle its tests sweep against).
 """
 from .flash_attention.ops import flash_attention
 from .decode_attention.ops import decode_attention
 from .ssd.ops import ssd_chunk
 from .rmsnorm.ops import fused_rmsnorm
+from .pricing.ops import pallas_columns
 
 __all__ = ["flash_attention", "decode_attention", "ssd_chunk",
-           "fused_rmsnorm"]
+           "fused_rmsnorm", "pallas_columns"]

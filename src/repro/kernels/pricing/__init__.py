@@ -1,0 +1,6 @@
+"""Pallas-lowered DSE pricing kernel (see ``kernel.py`` for the
+bit-exactness story). Selected via ``pricing_backend="pallas"`` on
+``repro.core.pricing.price_plans`` / ``DSEEngine``."""
+from .ops import certify, pallas_columns
+
+__all__ = ["certify", "pallas_columns"]

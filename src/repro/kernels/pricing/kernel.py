@@ -1,0 +1,167 @@
+"""Pallas-lowered batched design-point pricing (candidate-axis tiling).
+
+The DSE price phase (:mod:`repro.core.pricing`) is pure elementwise
+arithmetic over stacked float64 plan columns — exactly the shape Pallas
+tiles well: every column is blocked along the batch (candidate) axis and
+one grid step prices one tile of candidates entirely on-core. The kernel
+body *is* the shared pricing formula (``pricing._price`` — or any other
+elementwise column formula, e.g. ``pricing._roofline``), so the operation
+order that makes the batched backends bit-identical to the scalar
+reference is preserved by construction.
+
+Bit-exactness story
+-------------------
+The kernel runs in **interpret mode on CPU under ``enable_x64``** — every
+op is the IEEE-double XLA op the certified ``jax`` backend uses. Two
+compiled-path hazards remain, each pinned off separately:
+
+* LLVM contracts ``a*b + c`` into an FMA inside a fused computation (the
+  documented last-ulp drift of the ``jit=True`` pricing path; an
+  ``optimization_barrier`` alone does *not* stop it). The call is
+  AOT-compiled with ``xla_backend_optimization_level=0`` — a
+  *per-computation* compiler option, no process-global ``XLA_FLAGS``.
+* XLA's HLO algebraic simplifier re-rounds multi-op patterns, e.g.
+  ``div(div(a, b), c) → div(a, b·c)`` in the derate term. Inside the
+  kernel every value is a ``_StrictArray`` whose op results each pass
+  through an ``optimization_barrier``, so no cross-op pattern is visible
+  to the simplifier.
+
+With both in place the kernel is bit-identical to numpy and hence to
+``price_plan_scalar``. ``ops.certify()`` proves this row by row, and
+``tools/check_pricing_backend.py`` (``DFMODEL_PRICING_BACKEND=pallas``)
+enforces it end-to-end against the serial sweep in CI.
+
+A compiled TPU lowering would drop to float32 tiles of (8, 128) and leave
+the certified envelope — a deliberate non-goal here; interpret mode is
+the contract, the lowering is the scaling path for 10⁵-candidate grids.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+from jax.experimental import pallas as pl
+
+#: Candidates per grid step. Large enough to amortize interpret-mode
+#: dispatch, small enough that a tile of ~26 float64 columns stays resident.
+DEFAULT_TILE = 512
+
+
+def _unwrap(x):
+    return x.a if isinstance(x, _StrictArray) else x
+
+
+def _wrap(x):
+    return _StrictArray(jax.lax.optimization_barrier(x))
+
+
+class _StrictArray:
+    """An array whose every op result passes through an optimization
+    barrier, so XLA's algebraic simplifier cannot pattern-match across ops
+    (e.g. the div(div(a, b), c) → div(a, b·c) rewrite that would re-round
+    the derate term). Together with the level-0 backend compile this pins
+    the kernel to the exact per-op IEEE sequence of the numpy reference."""
+
+    __slots__ = ("a",)
+
+    def __init__(self, a):
+        self.a = a
+
+    def astype(self, dtype):
+        return _StrictArray(self.a.astype(dtype))
+
+
+def _defop(name):
+    def op(self, other):
+        return _wrap(getattr(self.a, name)(_unwrap(other)))
+    return op
+
+
+for _name in ("__add__", "__radd__", "__sub__", "__rsub__", "__mul__",
+              "__rmul__", "__truediv__", "__rtruediv__", "__pow__",
+              "__lt__", "__le__", "__gt__", "__ge__", "__eq__", "__ne__",
+              "__and__", "__rand__", "__or__", "__ror__"):
+    setattr(_StrictArray, _name, _defop(_name))
+
+
+class _StrictNamespace:
+    """The ``xp`` shim handed to the formula inside the kernel: jnp ops on
+    unwrapped values, every result barrier-wrapped."""
+
+    @staticmethod
+    def maximum(a, b):
+        return _wrap(jnp.maximum(_unwrap(a), _unwrap(b)))
+
+    @staticmethod
+    def minimum(a, b):
+        return _wrap(jnp.minimum(_unwrap(a), _unwrap(b)))
+
+    @staticmethod
+    def where(cond, x, y):
+        return _wrap(jnp.where(_unwrap(cond), _unwrap(x), _unwrap(y)))
+
+
+def _columns_kernel(*refs, formula, in_names, out_names):
+    """One grid step: price a tile of candidates with the shared formula."""
+    cols = {name: _StrictArray(ref[...])
+            for name, ref in zip(in_names, refs)}
+    out = formula(_StrictNamespace, cols)
+    for name, ref in zip(out_names, refs[len(in_names):]):
+        # bool outputs (the capacity check) travel as 0.0/1.0 float64; the
+        # ops wrapper restores the dtype outside the kernel
+        ref[...] = _unwrap(out[name]).astype(ref.dtype)
+
+
+@functools.lru_cache(maxsize=64)
+def _compiled_call(formula, in_names: tuple[str, ...],
+                   out_names: tuple[str, ...], padded: int, tile: int,
+                   interpret: bool):
+    """AOT-compile the tiled pallas call at optimization level 0 (see the
+    module docstring — this is what pins FMA contraction off). Cached per
+    (formula, column layout, padded length) so warm sweeps reuse the
+    executable."""
+    kernel = functools.partial(_columns_kernel, formula=formula,
+                               in_names=in_names, out_names=out_names)
+    spec = pl.BlockSpec((tile,), lambda i: (i,))
+    call = jax.jit(pl.pallas_call(
+        kernel,
+        grid=(padded // tile,),
+        in_specs=[spec] * len(in_names),
+        out_specs=[spec] * len(out_names),
+        out_shape=[jax.ShapeDtypeStruct((padded,), jnp.float64)
+                   for _ in out_names],
+        interpret=interpret,
+    ))
+    args = [jax.ShapeDtypeStruct((padded,), jnp.float64) for _ in in_names]
+    return call.lower(*args).compile(
+        compiler_options={"xla_backend_optimization_level": "0"})
+
+
+def run_columns(formula, cols, out_names, tile: int = DEFAULT_TILE,
+                interpret: bool = True) -> dict[str, np.ndarray]:
+    """Run an elementwise column formula as a Pallas kernel.
+
+    ``formula(xp, cols) -> dict`` must be pure elementwise arithmetic over
+    the batch axis (the :mod:`repro.core.pricing` contract). Columns are
+    padded to a tile multiple with neutral 1.0 rows (every pricing
+    denominator stays non-zero) and the pad is sliced off the outputs.
+    The tile is *not* shrunk to the batch: every batch ≤ ``tile`` pads to
+    one tile and shares a single cached executable instead of triggering
+    a per-length recompile.
+    """
+    in_names = tuple(cols)
+    n = len(next(iter(cols.values())))
+    padded = math.ceil(n / tile) * tile
+    with enable_x64():
+        compiled = _compiled_call(formula, in_names, tuple(out_names),
+                                  padded, tile, interpret)
+        ins = [jnp.asarray(np.pad(np.asarray(cols[name], dtype=np.float64),
+                                  (0, padded - n), constant_values=1.0))
+               for name in in_names]
+        outs = compiled(*ins)
+        return {name: np.asarray(out)[:n]
+                for name, out in zip(out_names, outs)}

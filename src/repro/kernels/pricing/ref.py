@@ -1,0 +1,19 @@
+"""Reference inputs + oracle for the pricing-kernel certification.
+
+The oracle is :func:`repro.core.pricing.price_plan_scalar` — the literal
+float64 transcription of the serial sweep's arithmetic; the kernel must
+reproduce it bit for bit. The inputs come from
+:func:`repro.core.pricing.random_plan_vectors`, the same seeded generator
+the property tests in ``tests/test_pricing.py`` draw from, so every
+backend is certified against one input distribution.
+"""
+from __future__ import annotations
+
+from repro.core.pricing import price_plan_scalar, random_plan_vectors
+
+__all__ = ["price_rows_scalar", "random_plan_vectors"]
+
+
+def price_rows_scalar(vectors) -> list[dict[str, float]]:
+    """Oracle rows for a batch (one scalar-reference dict per vector)."""
+    return [price_plan_scalar(v) for v in vectors]

@@ -7,6 +7,9 @@ test_solver.py for the vectorized minmax ``extra`` path.
 """
 from __future__ import annotations
 
+import dataclasses
+import warnings
+
 import numpy as np
 import pytest
 
@@ -163,6 +166,62 @@ def test_engine_explicit_mp_context_matches_serial(method):
 def test_engine_rejects_unknown_mp_context():
     with pytest.raises(ValueError):
         DSEEngine(mp_context="teleport")
+
+
+def test_candidate_matrix_shipping_spawn_exactly_once():
+    """Spawn workers ship one PlannedGroup (candidate matrix + winners)
+    per (chip, net, topology) system group; the parent's batched
+    re-pricing must account for every grid cell exactly once and at least
+    one candidate per group — and still reproduce the scalar reference."""
+    import multiprocessing
+
+    if "spawn" not in multiprocessing.get_all_start_methods():
+        pytest.skip("spawn not available on this platform")
+    clear_caches()
+    with caching_disabled():
+        ref = _scalar_reference(SMOKE_SPEC)
+    clear_caches()
+    engine = DSEEngine(parallel=True, max_workers=2, mp_context="spawn")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # a serial fallback would hide bugs
+        pts = engine.sweep(_tiny_work, SMOKE_SPEC)
+    assert [p.row() for p in pts] == [p.row() for p in ref]
+    stats = engine.last_plan_stats
+    assert stats is not None, "parallel phased path did not run"
+    grid = SMOKE_SPEC.grid()
+    system_groups = {(c, n, t) for c, _m, n, t in grid}
+    assert stats["cells"] == len(grid)          # every cell exactly once
+    assert stats["groups"] == len(system_groups)  # one matrix per system
+    assert stats["candidates"] >= stats["groups"]
+    # a second sweep resets the accounting rather than accumulating
+    engine.sweep(_tiny_work, SMOKE_SPEC)
+    assert engine.last_plan_stats["cells"] == len(grid)
+
+
+def test_backend_divergence_is_detected_not_silently_accepted():
+    """If the parent's batched selection (on a non-numpy backend) ever
+    disagreed with the worker's shipped winners, the sweep must fail
+    loudly (RuntimeError), because a silent disagreement would mean a
+    non-certified backend."""
+    pytest.importorskip("jax")
+    from repro.core.dse import plan_design_groups
+
+    clear_caches()
+    grid = SMOKE_SPEC.grid()
+    engine = DSEEngine(parallel=False, pricing_backend="jax")
+    groups = plan_design_groups(_tiny_work, grid, SMOKE_SPEC.n_chips,
+                                max_tp=SMOKE_SPEC.max_tp)
+    tampered = [dataclasses.replace(
+        g, winner_rows=tuple(r + 1 if r >= 0 else r
+                             for r in g.winner_rows))
+        for g in groups if len(g.matrix)]
+    with pytest.raises(RuntimeError, match="not bit-identical"):
+        engine._finish_plan_groups(tampered, len(grid))
+    # the numpy-reference parent skips the tautological re-pricing pass
+    clear_caches()
+    ref_engine = DSEEngine(parallel=False)
+    ref_engine._finish_plan_groups(groups, len(grid))
+    assert ref_engine.last_plan_stats["verified"] is False
 
 
 # ------------------------------ streaming ------------------------------------

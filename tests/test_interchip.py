@@ -1,12 +1,21 @@
-"""Inter-chip optimization pass tests (paper §IV)."""
+"""Inter-chip optimization pass tests (paper §IV), including the
+columnar-candidate certification: the batched lexicographic argmin over
+the priced PlanMatrix must pick the same winner as the scalar enumeration
+scan, bit for bit, including infeasible-tie ordering."""
 from __future__ import annotations
 
 import dataclasses
+import math
 
+import numpy as np
 import pytest
 
-from repro.core.interchip import (TrainWorkload, evaluate_plan,
-                                  optimize_inter_chip, _subdivide_dims)
+from repro.core.interchip import (TrainWorkload, candidate_matrix,
+                                  candidate_plans, evaluate_plan,
+                                  optimize_inter_chip, select_plan,
+                                  select_plans, winner_rows,
+                                  _subdivide_dims)
+from repro.core.memo import clear_caches
 from repro.systems.chips import HBM, ICI, NVLINK, TPU_V4, H100
 from repro.systems.system import SystemSpec
 from repro.systems.topology import ring, torus2d
@@ -110,6 +119,127 @@ def test_dp_allreduce_charged_once_per_iteration():
     w_chip = work.total_weight_bytes()
     expect = sys_.topology.all_reduce(w_chip, [0, 1])
     assert p.breakdown["dp_comm"] == pytest.approx(expect, rel=0.5)
+
+
+# ---------------------- columnar candidate selection -------------------------
+def _scalar_winner(plans, capacity):
+    """Literal transcription of the serial first-strictly-smaller scan,
+    returning the winning *index* (the tie-ordering ground truth)."""
+    bkey, bi = None, -1
+    for i, p in enumerate(plans):
+        key = (p.per_chip_mem_bytes > capacity, p.iter_time)
+        if bkey is None or key < bkey:
+            bkey, bi = key, i
+    return bi, (not bkey[0]) if bkey is not None else None
+
+
+def _random_workload(rng):
+    shape = LLMShape("rand", n_layers=int(rng.integers(2, 10)),
+                     d_model=int(rng.choice([256, 512, 1024])),
+                     n_heads=8, n_kv_heads=int(rng.choice([4, 8])),
+                     d_ff=int(rng.choice([1024, 2048])), vocab=8000,
+                     seq=int(rng.choice([512, 1024])))
+    return gpt_workload(shape, global_batch=int(rng.choice([16, 32, 64])),
+                        microbatch=1)
+
+
+def test_columnar_select_matches_scalar_enumeration_seeded():
+    """The acceptance property for the columnar path: across seeded random
+    workloads and systems, select_plan over the candidate matrix picks the
+    same candidate *index* as the scalar scan for every capacity regime —
+    all-feasible, none-feasible (pure iter_time ties), and boundary
+    capacities sitting exactly on a candidate's memory footprint."""
+    rng = np.random.default_rng(42)
+    checked_caps = 0
+    for _ in range(10):
+        clear_caches()
+        work = _random_workload(rng)
+        n = int(rng.choice([8, 16]))
+        topo = ring(n, ICI) if rng.integers(2) else torus2d(n, ICI)
+        chip = TPU_V4 if rng.integers(2) else H100
+        sys_ = SystemSpec("sys", chip, HBM, topo)
+        plans = candidate_plans(work, sys_, max_tp=16)
+        cands = candidate_matrix(work, sys_, max_tp=16)
+        assert len(cands) == len(plans) > 0
+        priced = cands.priced("numpy")
+        # the candidate vectors re-derive iter_time/mem through the batched
+        # formula — they must reproduce the plans' own scalar fields bitwise
+        want_it = np.array([p.iter_time for p in plans])
+        want_mem = np.array([p.per_chip_mem_bytes for p in plans])
+        assert (priced["iter_time"].view(np.uint64)
+                == want_it.view(np.uint64)).all()
+        assert (priced["per_chip_mem_bytes"].view(np.uint64)
+                == want_mem.view(np.uint64)).all()
+        mems = sorted({p.per_chip_mem_bytes for p in plans})
+        caps = [0.0, math.inf, mems[0], mems[len(mems) // 2],
+                float(rng.uniform(mems[0], mems[-1]))]
+        rows = winner_rows(priced["iter_time"],
+                           priced["per_chip_mem_bytes"], caps)
+        for cap, row in zip(caps, rows):
+            bi, feasible = _scalar_winner(plans, cap)
+            assert row == bi, f"cap={cap}: columnar {row} != scalar {bi}"
+            got = select_plan(cands, cap)
+            ref = select_plan(plans, cap)
+            assert got.feasible == ref.feasible == feasible
+            assert (got.tp, got.pp, got.dp) == (ref.tp, ref.pp, ref.dp)
+            assert got.iter_time == ref.iter_time
+            assert got.per_chip_mem_bytes == ref.per_chip_mem_bytes
+            checked_caps += 1
+    assert checked_caps >= 50
+
+
+def test_infeasible_tie_ordering_prefers_first_candidate():
+    """With capacity 0 every candidate is infeasible; symmetric dim
+    assignments produce exact iter_time ties, and the argmin must resolve
+    them to the lowest enumeration index — the serial acceptance order."""
+    clear_caches()
+    work = gpt_workload(SMALL, global_batch=64, microbatch=1)
+    sys_ = _system(16)
+    plans = candidate_plans(work, sys_, max_tp=16)
+    cands = candidate_matrix(work, sys_, max_tp=16)
+    it = np.array([p.iter_time for p in plans])
+    assert len(it) > len(np.unique(it)), "grid should produce exact ties"
+    row = winner_rows(cands.priced()["iter_time"],
+                      cands.priced()["per_chip_mem_bytes"], [0.0])[0]
+    first_min = int(np.flatnonzero(it == it.min())[0])
+    assert row == _scalar_winner(plans, 0.0)[0] == first_min
+    assert not select_plan(cands, 0.0).feasible
+
+
+def test_select_plans_batches_all_capacities_identically():
+    clear_caches()
+    work = gpt_workload(SMALL, global_batch=64, microbatch=1)
+    sys_ = _system(16)
+    cands = candidate_matrix(work, sys_, max_tp=16)
+    mems = sorted(p.per_chip_mem_bytes for p in cands.plans)
+    caps = [0.0, mems[0], mems[-1] * 2.0]
+    batch = select_plans(cands, caps)
+    for cap, got in zip(caps, batch):
+        one = select_plan(cands, cap)
+        assert (got.tp, got.pp, got.dp, got.feasible, got.iter_time) == \
+            (one.tp, one.pp, one.dp, one.feasible, one.iter_time)
+
+
+def test_select_plan_empty_candidates_returns_none():
+    from repro.core.interchip import CandidateSet
+    from repro.core.pricing import PlanMatrix
+
+    empty = CandidateSet(plans=[], matrix=PlanMatrix.concat([]))
+    assert select_plan(empty, 1e12) is None
+    assert select_plans(empty, [1e12, 0.0]) == [None, None]
+    assert select_plan([], 1e12) is None
+
+
+def test_candidate_matrix_tags_match_plan_coordinates():
+    clear_caches()
+    work = gpt_workload(SMALL, global_batch=64, microbatch=1)
+    sys_ = _system(16)
+    cands = candidate_matrix(work, sys_, max_tp=16)
+    assert cands.matrix.tags.shape == (len(cands), 4)
+    for (tp, pp, dp, a), plan in zip(cands.matrix.tags.tolist(),
+                                     cands.plans):
+        assert (tp, pp, dp) == (plan.tp, plan.pp, plan.dp)
+        assert a >= 0
 
 
 def test_nvlink_never_slower_than_pcie():

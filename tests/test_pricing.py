@@ -1,8 +1,9 @@
-"""Pricing-phase certification: the batched numpy and jax backends must
-reproduce the scalar reference *bit for bit* — on random plan vectors
-(seeded generation, with a hypothesis variant when the dev extra is
-installed, per the PR 1 convention) and end-to-end (phased sweep vs the
-serial scalar sweep across chips/memories/topologies)."""
+"""Pricing-phase certification: the batched numpy, jax and pallas
+(interpret-mode kernel) backends must reproduce the scalar reference
+*bit for bit* — on random plan vectors (seeded generation, with a
+hypothesis variant when the dev extra is installed, per the PR 1
+convention) and end-to-end (phased sweep vs the serial scalar sweep
+across chips/memories/topologies)."""
 from __future__ import annotations
 
 import numpy as np
@@ -11,7 +12,8 @@ import pytest
 from repro.core import clear_caches
 from repro.core.dse import sweep
 from repro.core.pricing import (FIELDS, PlanVector, batched_roofline,
-                                price_plan_scalar, price_plans, stack_plans)
+                                price_plan_scalar, price_plans,
+                                random_plan_vectors, stack_plans)
 from repro.core.roofline import RooflineTerms, stack_terms
 from repro.workloads.llm import LLAMA_68M, gpt_workload
 
@@ -28,43 +30,9 @@ OUT_KEYS = ("utilization", "cost_eff", "power_eff", "frac_compute",
             "per_chip_mem_bytes", "feasible")
 
 
-# --------------------------- vector generation -------------------------------
-def _random_vector(rng: np.random.Generator) -> PlanVector:
-    """A random-but-plausible plan vector, with the degenerate branches
-    (no DP comm, no p2p, empty intra pass, inference-only multipliers)
-    exercised at random."""
-    tp = float(2 ** rng.integers(0, 7))
-    pp = float(2 ** rng.integers(0, 5))
-    n_layers = int(rng.integers(1, 130))
-    lps = -(-n_layers // int(pp))  # ceil
-    return PlanVector(
-        t_comp_stage=float(rng.uniform(1e-6, 1.0)),
-        t_net_stage=float(rng.uniform(0.0, 1.0)),
-        t_p2p=float(rng.choice([0.0, rng.uniform(0.0, 0.1)])),
-        t_dp=float(rng.choice([0.0, rng.uniform(0.0, 0.5)])),
-        n_micro=float(rng.integers(1, 1025)),
-        tp=tp, pp=pp,
-        bwd_flop_mult=float(rng.choice([0.0, 2.0])),
-        bwd_comm_mult=float(rng.choice([0.0, 1.0])),
-        opt_mult=float(rng.choice([0.0, 8.0])),
-        model_flops=float(rng.uniform(1e12, 1e21)),
-        weight_bytes=float(rng.uniform(1e6, 1e13)),
-        act_bytes_layer=float(rng.uniform(1e3, 1e10)),
-        layers_per_stage=float(lps),
-        stage_layers=float(max(1, lps)),
-        n_chips=float(2 ** rng.integers(0, 11)),
-        chip_peak=float(rng.uniform(1e13, 1e16)),
-        mem_capacity=float(rng.uniform(1e9, 1e12)),
-        sys_peak_flops=float(rng.uniform(1e15, 1e19)),
-        sys_price=float(rng.uniform(1e5, 1e9)),
-        sys_power=float(rng.uniform(1e3, 1e7)),
-        intra_comp=float(rng.choice([0.0, rng.uniform(0.0, 1.0)])),
-        intra_mem=float(rng.choice([0.0, rng.uniform(0.0, 1.0)])),
-        intra_net=float(rng.choice([0.0, rng.uniform(0.0, 1.0)])),
-        intra_total=float(rng.choice([0.0, rng.uniform(1e-9, 1.0)])),
-    )
-
-
+# Vector generation lives in repro.core.pricing.random_plan_vectors — ONE
+# seeded generator shared with the pallas kernel's certify() harness, so
+# every backend is certified against the same input distribution.
 def _assert_bit_identical(vectors, backend, **kw):
     got = price_plans(vectors, backend=backend, **kw)
     ref = [price_plan_scalar(v) for v in vectors]
@@ -85,24 +53,39 @@ def _assert_bit_identical(vectors, backend, **kw):
 
 # ------------------------- seeded property tests -----------------------------
 def test_batched_numpy_matches_scalar_seeded():
-    rng = np.random.default_rng(0)
-    vectors = [_random_vector(rng) for _ in range(400)]
+    vectors = random_plan_vectors(400, seed=0)
     _assert_bit_identical(vectors, "numpy")
 
 
 def test_batched_jax_matches_scalar_seeded():
     pytest.importorskip("jax")
-    rng = np.random.default_rng(1)
-    vectors = [_random_vector(rng) for _ in range(200)]
+    vectors = random_plan_vectors(200, seed=1)
     _assert_bit_identical(vectors, "jax")
+
+
+def test_batched_pallas_matches_scalar_seeded():
+    """The interpret-mode Pallas pricing kernel is certified to the same
+    bit-exactness bar as the other backends — including batches that do
+    not divide the kernel tile (the padded tail must be sliced off)."""
+    pytest.importorskip("jax")
+    vectors = random_plan_vectors(200, seed=8)
+    _assert_bit_identical(vectors, "pallas")
+    _assert_bit_identical(vectors[:7], "pallas")   # sub-tile batch
+
+
+def test_pallas_kernel_certify_harness():
+    pytest.importorskip("jax")
+    from repro.kernels.pricing import certify
+
+    report = certify(n=256, seed=1, tile=100)  # force a ragged last tile
+    assert report["bit_identical"] and report["rows"] == 256
 
 
 def test_jax_jit_backend_is_close_but_not_certified():
     """jit=True lets XLA fuse into FMAs — allowed to differ in the last
     ulps, must still agree to rounding."""
     pytest.importorskip("jax")
-    rng = np.random.default_rng(2)
-    vectors = [_random_vector(rng) for _ in range(50)]
+    vectors = random_plan_vectors(50, seed=2)
     got = price_plans(vectors, backend="jax", jit=True)
     ref = [price_plan_scalar(v) for v in vectors]
     for key in OUT_KEYS:
@@ -113,8 +96,7 @@ def test_jax_jit_backend_is_close_but_not_certified():
 
 
 def test_stack_plans_shape_and_empty_batch():
-    rng = np.random.default_rng(3)
-    vectors = [_random_vector(rng) for _ in range(7)]
+    vectors = random_plan_vectors(7, seed=3)
     cols = stack_plans(vectors)
     assert set(cols) == set(FIELDS)
     assert all(c.shape == (7,) and c.dtype == np.float64
@@ -124,9 +106,8 @@ def test_stack_plans_shape_and_empty_batch():
 
 
 def test_unknown_backend_rejected():
-    rng = np.random.default_rng(4)
     with pytest.raises(ValueError):
-        price_plans([_random_vector(rng)], backend="cuda")
+        price_plans(random_plan_vectors(1, seed=4), backend="cuda")
 
 
 # ------------------------ hypothesis variant (dev extra) ---------------------
@@ -170,12 +151,12 @@ _GRID = dict(n_chips=16,
              max_tp=16)
 
 
-@pytest.mark.parametrize("backend", ["numpy", "jax"])
+@pytest.mark.parametrize("backend", ["numpy", "jax", "pallas"])
 def test_phased_sweep_rows_identical_to_scalar(backend):
     """The acceptance property: batched pricing returns DesignPoint.row()
     dicts element-identical to the serial scalar sweep, across every chip
     and memory of the grid."""
-    if backend == "jax":
+    if backend in ("jax", "pallas"):
         pytest.importorskip("jax")
     clear_caches()
     ref = sweep(_tiny_work, phased=False, **_GRID)
@@ -202,6 +183,23 @@ def test_batched_roofline_matches_scalar_terms():
                       ("useful_flop_ratio", "useful_flop_ratio")]:
         want = np.array([getattr(t, attr) for t in terms])
         assert (got[key].view(np.uint64) == want.view(np.uint64)).all(), key
+
+
+def test_batched_roofline_pallas_matches_numpy():
+    pytest.importorskip("jax")
+    rng = np.random.default_rng(9)
+    terms = [RooflineTerms(name=f"p{i}", chips=8,
+                           hlo_flops=float(rng.uniform(1e12, 1e18)),
+                           hlo_bytes=float(rng.uniform(1e9, 1e15)),
+                           collective_bytes=float(
+                               rng.choice([0.0, rng.uniform(1e6, 1e13)])),
+                           model_flops=float(rng.uniform(1e12, 1e18)))
+             for i in range(64)]
+    cols = stack_terms(terms)
+    a = batched_roofline(cols, backend="numpy")
+    b = batched_roofline(cols, backend="pallas")
+    for key in a:
+        assert (a[key].view(np.uint64) == b[key].view(np.uint64)).all(), key
 
 
 def test_batched_roofline_jax_matches_numpy():

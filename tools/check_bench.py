@@ -1,0 +1,128 @@
+"""CI bench-regression gate for the DSE engine.
+
+Runs the smoke `speedup_report` (the same measurement `benchmarks.run
+--smoke` takes) into a scratch file and compares it against the committed
+`BENCH_dse.json` baseline:
+
+* **row identity** — every evaluation path must still produce bit-identical
+  `DesignPoint.row()` lists (`rows_identical` true in the fresh report);
+* **throughput** — per-path points-per-second may not fall below
+  `baseline / $DFMODEL_BENCH_SLOWDOWN` (default 4.0: CI machines are
+  noisy and heterogeneous; the gate catches order-of-magnitude rot, not
+  scheduler jitter);
+* **phased speedup** — the warm-cache phased-vs-per-point ratio (the
+  engine's headline number) must stay ≥ $DFMODEL_BENCH_MIN_SPEEDUP
+  (default 0.8 — the committed baseline is ~1.9×);
+* **cache hit-rate** — the memo-cache hit rate may not drop more than
+  $DFMODEL_BENCH_HIT_DROP (default 0.02 absolute) below the baseline.
+
+Exit 1 on any regression. `--update` rewrites the committed baseline with
+the fresh numbers instead (run it on the machine that owns the baseline
+after a deliberate perf change).
+
+  PYTHONPATH=src python tools/check_bench.py [--update] [--baseline PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import sys
+import tempfile
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO))          # benchmarks package
+sys.path.insert(0, str(REPO / "src"))  # repro package
+BASELINE = REPO / "BENCH_dse.json"
+
+
+def _fresh_report() -> dict:
+    from benchmarks.bench_dse import speedup_report
+
+    with tempfile.TemporaryDirectory() as tmp:
+        path = pathlib.Path(tmp) / "BENCH_dse.json"
+        speedup_report("llm", smoke=True, json_path=path)
+        return json.loads(path.read_text())
+
+
+def _hit_rate(report: dict) -> float:
+    cache = report.get("cache", {})
+    total = cache.get("hits", 0) + cache.get("misses", 0)
+    return cache.get("hits", 0) / total if total else 0.0
+
+
+def compare(fresh: dict, base: dict,
+            slowdown: float, min_speedup: float,
+            hit_drop: float) -> list[str]:
+    """Return a list of human-readable regression messages (empty = pass)."""
+    problems: list[str] = []
+    if not fresh.get("rows_identical", False):
+        problems.append("rows_identical is False: the evaluation paths "
+                        "no longer agree bit-for-bit")
+    for path, vals in base.get("paths", {}).items():
+        got = fresh.get("paths", {}).get(path)
+        if got is None:
+            problems.append(f"path {path!r} missing from the fresh report")
+            continue
+        floor = vals["points_per_s"] / slowdown
+        if got["points_per_s"] < floor:
+            problems.append(
+                f"{path}: {got['points_per_s']:.1f} points/s < "
+                f"{floor:.1f} (baseline {vals['points_per_s']:.1f} "
+                f"/ slowdown limit {slowdown:g})")
+    ratio = fresh.get("speedup_phased_vs_perpoint", 0.0)
+    if ratio < min_speedup:
+        problems.append(
+            f"warm phased-vs-perpoint speedup {ratio:.2f} < {min_speedup:g} "
+            f"(baseline {base.get('speedup_phased_vs_perpoint', 0.0):.2f})")
+    fresh_hr, base_hr = _hit_rate(fresh), _hit_rate(base)
+    if fresh_hr < base_hr - hit_drop:
+        problems.append(
+            f"cache hit-rate {fresh_hr:.3f} < baseline {base_hr:.3f} "
+            f"- {hit_drop:g}")
+    return problems
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", type=pathlib.Path, default=BASELINE,
+                    help=f"baseline JSON (default {BASELINE})")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline with fresh numbers")
+    args = ap.parse_args()
+
+    slowdown = float(os.environ.get("DFMODEL_BENCH_SLOWDOWN", "4.0"))
+    min_speedup = float(os.environ.get("DFMODEL_BENCH_MIN_SPEEDUP", "0.8"))
+    hit_drop = float(os.environ.get("DFMODEL_BENCH_HIT_DROP", "0.02"))
+
+    fresh = _fresh_report()
+    if args.update:
+        args.baseline.write_text(json.dumps(fresh, indent=2) + "\n")
+        print(f"bench baseline updated: {args.baseline} "
+              f"(warm phased speedup "
+              f"{fresh['speedup_phased_vs_perpoint']:.2f}x)")
+        return 0
+    if not args.baseline.exists():
+        print(f"bench gate: no baseline at {args.baseline}; "
+              f"run with --update to create one", file=sys.stderr)
+        return 1
+    base = json.loads(args.baseline.read_text())
+    problems = compare(fresh, base, slowdown, min_speedup, hit_drop)
+    for path, vals in fresh.get("paths", {}).items():
+        print(f"  {path:20s} {vals['points_per_s']:10.1f} points/s "
+              f"(baseline "
+              f"{base.get('paths', {}).get(path, {}).get('points_per_s', 0.0):10.1f})")
+    if problems:
+        print("bench gate: REGRESSION", file=sys.stderr)
+        for p in problems:
+            print(f"  - {p}", file=sys.stderr)
+        return 1
+    print(f"bench gate: PASS (rows identical, warm phased speedup "
+          f"{fresh['speedup_phased_vs_perpoint']:.2f}x, hit rate "
+          f"{_hit_rate(fresh):.3f})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,18 +1,24 @@
 """CI gate: the phased smoke sweep must reproduce the scalar reference
 bit-for-bit on the pricing backend named by $DFMODEL_PRICING_BACKEND
-(jax skips gracefully when the container lacks it).
+(jax / pallas skip gracefully when the container lacks jax).
 
   PYTHONPATH=src DFMODEL_PRICING_BACKEND=jax python tools/check_pricing_backend.py
+  PYTHONPATH=src DFMODEL_PRICING_BACKEND=pallas python tools/check_pricing_backend.py
+
+For the pallas backend the kernel package's own certification harness
+(`repro.kernels.pricing.certify` — row-identity of the interpret-mode
+kernel against the float64 scalar reference) runs first, then the same
+end-to-end sweep comparison the other backends get.
 """
 import os
 import sys
 
 backend = os.environ.get("DFMODEL_PRICING_BACKEND", "numpy")
-if backend == "jax":
+if backend in ("jax", "pallas"):
     try:
         import jax  # noqa: F401
     except Exception:
-        print("pricing backend jax: SKIPPED (jax not installed)")
+        print(f"pricing backend {backend}: SKIPPED (jax not installed)")
         sys.exit(0)
 
 from repro.core import DSEEngine, clear_caches  # noqa: E402
@@ -21,6 +27,11 @@ from repro.workloads.scenarios import get_scenario  # noqa: E402
 
 
 def main() -> None:
+    if backend == "pallas":
+        from repro.kernels.pricing import certify
+
+        report = certify(n=512, seed=0)
+        print(f"pallas pricing kernel certification: {report}")
     sc = get_scenario("llm", smoke=True)
     s = sc.spec
     clear_caches()

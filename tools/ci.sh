@@ -21,9 +21,20 @@ PYTHONPATH=src python -m pytest -x -q
 PYTHONPATH=src python -m benchmarks.run --smoke
 
 # pricing backends: the phased smoke sweep must reproduce the scalar
-# reference bit-for-bit on BOTH batched backends (jax skips gracefully if
-# the container lacks it)
-for backend in numpy jax; do
+# reference bit-for-bit on every batched backend. The jax and pallas legs
+# need jax; skip them HERE with an explicit line (rather than relying on
+# the checker's internal skip) so offline-container logs are unambiguous.
+if python -c "import jax" >/dev/null 2>&1; then HAVE_JAX=1; else HAVE_JAX=0; fi
+for backend in numpy jax pallas; do
+    if [[ "$backend" != numpy && "$HAVE_JAX" == 0 ]]; then
+        echo "pricing backend $backend: SKIP (no jax)"
+        continue
+    fi
     PYTHONPATH=src DFMODEL_PRICING_BACKEND=$backend \
         python tools/check_pricing_backend.py
 done
+
+# bench-regression gate: fresh smoke BENCH_dse.json vs the committed
+# baseline (row identity, points/sec floor, warm phased speedup, memo
+# cache hit-rate) — see tools/check_bench.py for the tolerances
+PYTHONPATH=src python tools/check_bench.py
