@@ -1,0 +1,7 @@
+"""Benchmark harness package — one module per paper table/figure.
+
+An explicit package (not an implicit namespace package) so that both
+invocation styles the repo uses resolve the same way from the repo root:
+``python -m benchmarks.run --smoke`` (tools/ci.sh, the workflow) and
+``from benchmarks.bench_dse import speedup_report`` (tools/check_bench.py).
+"""

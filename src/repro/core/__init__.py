@@ -19,7 +19,10 @@ Public surface:
   pricing (batched)   : PlanVector, PlanMatrix, price_plans,
                         price_plan_scalar, stack_plans, batched_roofline
                         (numpy | jax.vmap | pallas interpret kernel)
-  memo cache          : cache_stats, clear_caches, caching_disabled
+  memo cache          : cache_stats, clear_caches, caching_disabled;
+                        cross-process tier (memo_store.py): create_store,
+                        StoreHandle — mmap table / socket server shared by
+                        sweep workers, DSEEngine(shared_cache=...)
   serving (§VIII)     : serving_sweep, speculative_throughput
   plan (runtime glue) : plan_for → MappingPlan consumed by repro.launch
 """
@@ -47,6 +50,8 @@ from .pricing import (PlanMatrix, PlanVector, batched_roofline,
                       price_plan_scalar, price_plans, stack_plans)
 from .memo import (CacheStats, SolveCache, cache_stats, caching_disabled,
                    clear_caches)
+from .memo_store import (MmapStore, ServerStore, StoreHandle, choose_backend,
+                         create_store)
 from .serving import (ServingPoint, SpecDecodePoint, expected_accepted,
                       serving_sweep, speculative_throughput)
 
@@ -73,6 +78,8 @@ __all__ = [
     "price_plans", "stack_plans",
     "CacheStats", "SolveCache", "cache_stats", "caching_disabled",
     "clear_caches",
+    "MmapStore", "ServerStore", "StoreHandle", "choose_backend",
+    "create_store",
     "ServingPoint", "SpecDecodePoint", "expected_accepted", "serving_sweep",
     "speculative_throughput",
 ]

@@ -61,6 +61,7 @@ from .dse import (DEFAULT_CHIPS, DEFAULT_MEM_NET, DEFAULT_TOPOLOGIES,
                   plan_design_groups, price_planned)
 from .interchip import TrainWorkload, certify_winner_rows
 from .memo import GLOBAL_CACHE, caching_disabled
+from .memo_store import StoreHandle, choose_backend, create_store
 from .pricing import PlanMatrix, price_plans
 
 
@@ -161,6 +162,22 @@ def pareto_frontier(points: Sequence[DesignPoint],
 _WORKER_CTX: dict = {}
 
 
+def _init_worker_shared(handle: StoreHandle) -> None:
+    """Pool-worker initializer: attach a fresh connection to the sweep's
+    shared memo store.  Runs before any task in every worker, for every
+    start method — fork children must not reuse the parent's socket or
+    lock-owning fd, so inheriting the parent's attached client is never
+    enough.  The exit hook flushes whatever the client still buffers
+    (trailing puts, stats deltas) when the pool retires the worker; it is
+    a ``multiprocessing.util.Finalize``, NOT ``atexit`` — pool children
+    leave via ``os._exit``, which skips atexit handlers."""
+    from multiprocessing.util import Finalize
+
+    client = handle.connect()
+    GLOBAL_CACHE.attach_shared(client)
+    Finalize(None, client.close, exitpriority=10)
+
+
 def _eval_index(i: int) -> DesignPoint | None:
     ctx = _WORKER_CTX
     return evaluate_design_point(ctx["work_fn"], ctx["grid"][i],
@@ -223,6 +240,19 @@ def _pool_infra_errors() -> tuple[type[BaseException], ...]:
     return (OSError, BrokenProcessPool, pickle.PicklingError)
 
 
+def _require_picklable(work_fn) -> None:
+    """Probe work_fn for non-fork transports. Pickle reports unpicklable
+    callables inconsistently (PicklingError, AttributeError for local
+    closures, TypeError) — normalize to PicklingError so the probe always
+    lands in the infra-error fallback, never masquerades as a work_fn bug."""
+    try:
+        pickle.dumps(work_fn)
+    except Exception as exc:
+        raise pickle.PicklingError(
+            f"work_fn {work_fn!r} is not picklable, which the non-fork "
+            f"pool transport requires: {exc}") from exc
+
+
 class DSEEngine:
     """Parallel + cached + phase-split design-space sweep engine.
 
@@ -254,6 +284,17 @@ class DSEEngine:
         parent's batched candidate-selection and final pricing calls
         (:func:`repro.core.pricing.price_plans`). Workers always select on
         the numpy reference; the parent certifies its backend against them.
+    shared_cache:
+        ``False`` (default) keeps worker memo caches process-private.
+        ``True``/``"auto"`` layers a cross-process shared memo store
+        (:mod:`repro.core.memo_store`) under every worker's cache for the
+        duration of each parallel sweep, so workers reuse each other's
+        plan/sharding/minmax/subdiv/candmat solves; the backend follows
+        the pool transport (mmap table for fork/forkserver, unix-socket
+        server for spawn). ``"mmap"``/``"server"`` force a backend. The
+        store lives for one sweep: it is created next to the pool and torn
+        down — even on pool failure — before the sweep returns, leaving
+        its aggregated cross-process stats in ``last_shared_stats``.
     """
 
     def __init__(self, max_workers: int | None = None,
@@ -262,7 +303,8 @@ class DSEEngine:
                  mp_context: str | multiprocessing.context.BaseContext | None
                  = None,
                  phased: bool = True,
-                 pricing_backend: str = "auto") -> None:
+                 pricing_backend: str = "auto",
+                 shared_cache: bool | str = False) -> None:
         self.max_workers = max_workers or (os.cpu_count() or 1)
         self.parallel = parallel
         self.use_cache = use_cache
@@ -274,11 +316,23 @@ class DSEEngine:
         self.mp_context = mp_context
         self.phased = phased
         self.pricing_backend = pricing_backend
+        if shared_cache not in (False, True, "auto", "mmap", "server"):
+            raise ValueError(
+                f"shared_cache {shared_cache!r}; expected False, True, "
+                f"'auto', 'mmap' or 'server'")
+        self.shared_cache = shared_cache
         #: Plan-phase accounting of the last parallel phased sweep:
         #: {"groups", "candidates", "cells", "backend"} — the exactly-once
         #: candidate-matrix shipping contract tests/test_dse_engine.py
         #: asserts. ``None`` until a parallel phased sweep completes.
         self.last_plan_stats: dict | None = None
+        #: Aggregated cross-process stats of the last parallel sweep's
+        #: shared memo store ({"backend", "hits", "misses", "inserts",
+        #: "dropped", "entries", "by_space"}), or ``None`` when no shared
+        #: store ran. ``hits`` counts lookups served by *another*
+        #: process's solve — the cross-worker reuse ``BENCH_dse.json``'s
+        #: ``cold_parallel_shared`` row certifies.
+        self.last_shared_stats: dict | None = None
 
     # -- core sweep ----------------------------------------------------------
     def sweep(self, work_fn: Callable[[SystemSpec], TrainWorkload],
@@ -290,6 +344,7 @@ class DSEEngine:
         """
         grid = spec.grid()
         self.last_plan_stats = None
+        self.last_shared_stats = None
         if not self.phased:
             return self._sweep_perpoint(work_fn, spec, grid)
         planned: list[PlannedPoint | None] | None = None
@@ -326,6 +381,7 @@ class DSEEngine:
         axis, so streamed values are bit-identical to a full sweep's.
         """
         grid = spec.grid()
+        self.last_shared_stats = None
         delivered: set[int] = set()
         if self._should_parallelize(len(grid)):
             gen = self._parallel_iter(work_fn, spec, grid, stop)
@@ -401,6 +457,55 @@ class DSEEngine:
             return self.mp_context
         return multiprocessing.get_context(self._start_method())
 
+    # -- shared memo store (one per parallel sweep) --------------------------
+    def _open_shared_store(self):
+        """Create the sweep's cross-process memo store and attach it to
+        the parent's cache too (the parent's own misses then seed the
+        workers).  ``None`` when disabled — or when caching is off, which
+        must stay genuinely cold."""
+        if not self.shared_cache or not self.use_cache:
+            return None
+        try:
+            backend = (self.shared_cache
+                       if self.shared_cache in ("mmap", "server")
+                       else choose_backend(self._start_method()))
+            store = create_store(backend, mp_context=self._mp_context())
+        except (RuntimeError, OSError) as exc:
+            # no usable backend on this platform (no fcntl, no AF_UNIX) or
+            # the store could not materialize (unwritable TMPDIR, socket
+            # bind failure — an OSError escaping here would otherwise land
+            # in the callers' pool-infra fallback and needlessly serialize
+            # the sweep): the cache tier must never take the sweep down —
+            # keep the parallel pool, just with process-private caches
+            warnings.warn(f"shared memo store unavailable ({exc}); "
+                          f"sweeping with private caches", RuntimeWarning,
+                          stacklevel=3)
+            return None
+        GLOBAL_CACHE.attach_shared(store)
+        return store
+
+    def _close_shared_store(self, store) -> None:
+        """Detach + tear down the sweep's store, keeping its aggregated
+        cross-process stats.  Runs in ``finally`` blocks so a pool failure
+        (and the serial fallback after it) never leaks a store, a server
+        process, or a stale attachment."""
+        if store is None:
+            return
+        if GLOBAL_CACHE.shared is store:
+            GLOBAL_CACHE.detach_shared()
+        try:
+            self.last_shared_stats = store.stats()
+        except Exception:
+            self.last_shared_stats = None
+        store.close()
+
+    def _pool_kwargs(self, store) -> dict:
+        """Extra ``ProcessPoolExecutor`` kwargs wiring workers to ``store``."""
+        if store is None:
+            return {}
+        return {"initializer": _init_worker_shared,
+                "initargs": (store.handle(),)}
+
     # -- per-point path (PR 1 baseline) --------------------------------------
     def _sweep_perpoint(self, work_fn, spec: SweepSpec, grid):
         results = None
@@ -445,23 +550,27 @@ class DSEEngine:
         chunk = min(max(group, 1), max(1, per_worker))
         method = self._start_method()
         ctx = self._mp_context()
-
-        if method != "fork":
-            # spawn/forkserver ship full task args — requires a picklable
-            # work_fn; an unpicklable one is an infra error → serial fallback
-            pickle.dumps(work_fn)
-            tasks = [(work_fn, grid[i], spec.n_chips, spec.max_tp,
-                      spec.max_pp, spec.execution) for i in order]
-            fn, payload = _eval_args, tasks
-        else:
-            _WORKER_CTX.update(work_fn=work_fn, grid=grid,
-                               n_chips=spec.n_chips, max_tp=spec.max_tp,
-                               max_pp=spec.max_pp, execution=spec.execution)
-            fn, payload = _eval_index, order
+        store = self._open_shared_store()
         try:
+            if method != "fork":
+                # spawn/forkserver ship full task args — requires a
+                # picklable work_fn; an unpicklable one is an infra error
+                # → serial fallback
+                _require_picklable(work_fn)
+                tasks = [(work_fn, grid[i], spec.n_chips, spec.max_tp,
+                          spec.max_pp, spec.execution) for i in order]
+                fn, payload = _eval_args, tasks
+            else:
+                _WORKER_CTX.update(work_fn=work_fn, grid=grid,
+                                   n_chips=spec.n_chips, max_tp=spec.max_tp,
+                                   max_pp=spec.max_pp,
+                                   execution=spec.execution)
+                fn, payload = _eval_index, order
             with self._cache_mode():
                 with cf.ProcessPoolExecutor(max_workers=workers,
-                                            mp_context=ctx) as pool:
+                                            mp_context=ctx,
+                                            **self._pool_kwargs(store)
+                                            ) as pool:
                     mapped = pool.map(fn, payload, chunksize=chunk)
                     out: list[DesignPoint | None] = [None] * len(grid)
                     for j, point in zip(order, mapped):
@@ -469,6 +578,7 @@ class DSEEngine:
                     return out
         finally:
             _WORKER_CTX.clear()
+            self._close_shared_store(store)
 
     # -- phased path ---------------------------------------------------------
     def _plan_tasks(self, work_fn, spec: SweepSpec, grid):
@@ -477,7 +587,7 @@ class DSEEngine:
         ship = self._resolved_backend() != "numpy"
         method = self._start_method()
         if method != "fork":
-            pickle.dumps(work_fn)
+            _require_picklable(work_fn)
             payload = [(work_fn, [grid[i] for i in idxs], idxs, spec.n_chips,
                         spec.max_tp, spec.max_pp, spec.execution, ship)
                        for idxs in groups]
@@ -492,17 +602,21 @@ class DSEEngine:
         import concurrent.futures as cf
 
         workers = min(self.max_workers, max(1, len(grid) // 2))
-        fn, payload, used_ctx = self._plan_tasks(work_fn, spec, grid)
+        store = self._open_shared_store()
+        used_ctx = False
         try:
+            fn, payload, used_ctx = self._plan_tasks(work_fn, spec, grid)
             with self._cache_mode():
                 with cf.ProcessPoolExecutor(max_workers=workers,
-                                            mp_context=self._mp_context()
+                                            mp_context=self._mp_context(),
+                                            **self._pool_kwargs(store)
                                             ) as pool:
                     groups = [g for result in pool.map(fn, payload)
                               for g in result]
         finally:
             if used_ctx:
                 _WORKER_CTX.clear()
+            self._close_shared_store(store)
         return self._finish_plan_groups(groups, len(grid))
 
     def _finish_plan_groups(self, groups: list[PlannedGroup], n_cells: int
@@ -572,11 +686,15 @@ class DSEEngine:
         import concurrent.futures as cf
 
         workers = min(self.max_workers, max(1, len(grid) // 2))
-        fn, payload, used_ctx = self._plan_tasks(work_fn, spec, grid)
         window = max(2 * workers, workers + 1)
-        pool = cf.ProcessPoolExecutor(max_workers=workers,
-                                      mp_context=self._mp_context())
+        store = self._open_shared_store()
+        used_ctx = False
+        pool = None
         try:
+            fn, payload, used_ctx = self._plan_tasks(work_fn, spec, grid)
+            pool = cf.ProcessPoolExecutor(max_workers=workers,
+                                          mp_context=self._mp_context(),
+                                          **self._pool_kwargs(store))
             with self._cache_mode():
                 queue = iter(payload)
                 pending: set = set()
@@ -600,9 +718,11 @@ class DSEEngine:
                             if len(pending) >= window:
                                 break
         finally:
-            pool.shutdown(wait=True, cancel_futures=True)
+            if pool is not None:
+                pool.shutdown(wait=True, cancel_futures=True)
             if used_ctx:
                 _WORKER_CTX.clear()
+            self._close_shared_store(store)
 
     def _stream_group(self, grid, group: PlannedGroup) -> list[SweepItem]:
         # certify the worker's candidate argmin on a non-numpy parent

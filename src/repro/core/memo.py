@@ -26,14 +26,22 @@ Under that contract a cache hit returns an object computed from bitwise-
 identical inputs, so cached and uncached sweeps produce identical results —
 the property ``tests/test_dse_engine.py`` locks in.
 
-Each process owns its own cache (workers of a forked
+Each process owns its own local cache (workers of a forked
 :class:`repro.core.dse_engine.DSEEngine` pool inherit the parent's warm
-entries at fork time).
+entries at fork time).  A *shared* tier can be layered underneath via
+:meth:`SolveCache.attach_shared`: lookups then fall back local → shared,
+and computed values are written through to both, so every worker of one
+sweep reuses every other worker's solves (see
+:mod:`repro.core.memo_store` for the cross-process store backends).  The
+shared tier is strictly an extra place to find the same
+structurally-keyed values, so the bit-identical-results property is
+unchanged — and any shared-store failure silently degrades to a miss.
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
+import pickle
 from collections import Counter
 from typing import Any, Callable, Hashable
 
@@ -79,6 +87,19 @@ class SolveCache:
         self._data: dict[tuple[str, Hashable], Any] = {}
         self._hits: Counter[str] = Counter()
         self._misses: Counter[str] = Counter()
+        #: Optional cross-process tier (see ``repro.core.memo_store``):
+        #: a client with ``get(space, key_bytes) -> bytes | None`` and
+        #: ``put(space, key_bytes, value_bytes)``.
+        self.shared = None
+
+    def attach_shared(self, client) -> None:
+        """Layer a cross-process store under the local dict (write-through)."""
+        self.shared = client
+
+    def detach_shared(self):
+        """Remove and return the shared tier (local entries stay warm)."""
+        client, self.shared = self.shared, None
+        return client
 
     def get_or_compute(self, space: str, key: Hashable,
                        compute: Callable[[], Any]) -> Any:
@@ -89,12 +110,55 @@ class SolveCache:
         if full in self._data:
             self._hits[space] += 1
             return self._data[full]
+        blob_key = self._shared_key(full) if self.shared is not None else None
+        if blob_key is not None:
+            found = self._shared_get(space, blob_key)
+            if found is not None:
+                # found in another process's work: a hit for this sweep
+                # (the store's own stats count it as a cross-process hit)
+                (value,) = found
+                self._hits[space] += 1
+                if len(self._data) >= self.max_entries:
+                    self._data.clear()
+                self._data[full] = value
+                return value
         value = compute()
         if len(self._data) >= self.max_entries:
             self._data.clear()
         self._data[full] = value
         self._misses[space] += 1
+        if blob_key is not None:
+            self._shared_put(space, blob_key, value)
         return value
+
+    # -- shared tier (never allowed to break a solve) --
+    def _shared_key(self, full: tuple[str, Hashable]) -> bytes | None:
+        try:
+            return pickle.dumps(full, pickle.HIGHEST_PROTOCOL)
+        except Exception:
+            return None  # unpicklable key: local-only entry
+
+    def _shared_get(self, space: str,
+                    blob_key: bytes) -> tuple[Any] | None:
+        """The stored value in a 1-tuple (``None`` *values* are legitimate
+        cache entries — e.g. failed plan solves) or ``None`` on a miss."""
+        try:
+            blob = self.shared.get(space, blob_key)
+            if blob is None:
+                return None
+            found = pickle.loads(blob)
+            if isinstance(found, tuple) and len(found) == 1:
+                return found
+            return None  # not our wrapping: treat as a miss, never raise
+        except Exception:
+            return None
+
+    def _shared_put(self, space: str, blob_key: bytes, value: Any) -> None:
+        try:
+            self.shared.put(space, blob_key,
+                            pickle.dumps((value,), pickle.HIGHEST_PROTOCOL))
+        except Exception:
+            pass  # unpicklable value / full stripe / dead store: local-only
 
     def stats(self) -> CacheStats:
         sizes: Counter[str] = Counter(space for space, _ in self._data)

@@ -1,10 +1,33 @@
-from .config import ModelConfig
-from .inputs import decode_specs, input_specs, synth_batch, train_batch_specs
-from .transformer import (decode_step, encode, forward, init_cache,
-                          init_params, loss_fn, param_count, prefill)
+"""Runtime transformer model stack (jax).
 
-__all__ = [
-    "ModelConfig", "decode_specs", "input_specs", "synth_batch",
-    "train_batch_specs", "decode_step", "encode", "forward", "init_cache",
-    "init_params", "loss_fn", "param_count", "prefill",
-]
+Attributes resolve lazily (PEP 562): ``ModelConfig`` lives in the
+jax-free :mod:`.config`, everything else imports jax on first touch.
+Eager imports here used to drag jax into the *analytical* DSE layer
+through the model-config references in ``repro.configs`` — which silently
+flipped ``DSEEngine``'s pool auto-detection from fork to spawn (forking a
+jax-threaded process is a deadlock risk) and cost every sweep its cheap
+fork workers.  ``from repro.models import init_params`` still works; it
+just pays the jax import only where the runtime stack is actually used.
+"""
+from .config import ModelConfig
+
+_INPUTS = ("decode_specs", "input_specs", "synth_batch",
+           "train_batch_specs")
+_TRANSFORMER = ("decode_step", "encode", "forward", "init_cache",
+                "init_params", "loss_fn", "param_count", "prefill")
+
+__all__ = ["ModelConfig", *_INPUTS, *_TRANSFORMER]
+
+
+def __getattr__(name: str):
+    if name in _INPUTS:
+        from . import inputs as mod
+    elif name in _TRANSFORMER:
+        from . import transformer as mod
+    elif name in ("inputs", "transformer", "layers"):
+        import importlib
+
+        return importlib.import_module(f".{name}", __name__)
+    else:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    return getattr(mod, name)

@@ -1,13 +1,20 @@
-"""DSEEngine tests: parallel determinism, memo-cache correctness, Pareto
-extraction, and the infeasible-point skip contract.
+"""DSEEngine tests: parallel determinism, memo-cache correctness, the
+cross-process shared memo store, Pareto extraction, and the
+infeasible-point skip contract.
 
 These tests intentionally avoid hypothesis so they run on a bare
 install — the seeded random checks below mirror the property tests in
 test_solver.py for the vectorized minmax ``extra`` path.
+
+The CI matrix re-runs this file with ``DFMODEL_TEST_MP_CONTEXT``
+(fork | spawn | forkserver) and ``DFMODEL_TEST_SHARED_CACHE`` (1 | 0):
+engines built through :func:`_engine` pick those up, so every pool
+transport is exercised with the shared store both on and off.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 import warnings
 
 import numpy as np
@@ -17,6 +24,7 @@ from repro.core import (DSEEngine, SweepSpec, cache_stats, caching_disabled,
                         clear_caches, pareto_frontier, stop_after_feasible,
                         sweep)
 from repro.core.dse import design_grid
+from repro.core.memo import GLOBAL_CACHE
 from repro.core.solver import minmax_partition, minmax_partition_scalar
 from repro.workloads.llm import LLAMA_68M, gpt_workload
 from repro.workloads.scenarios import get_scenario, scenario_names
@@ -24,6 +32,18 @@ from repro.workloads.scenarios import get_scenario, scenario_names
 # module-level so the workload builder is picklable under spawn semantics
 def _tiny_work(system):
     return gpt_workload(LLAMA_68M, global_batch=64, microbatch=1)
+
+
+def _engine(**kwargs) -> DSEEngine:
+    """DSEEngine honoring the CI-matrix env knobs (explicit kwargs win)."""
+    env_ctx = os.environ.get("DFMODEL_TEST_MP_CONTEXT")
+    if env_ctx:
+        kwargs.setdefault("mp_context", env_ctx)
+    env_shared = os.environ.get("DFMODEL_TEST_SHARED_CACHE")
+    if env_shared is not None:
+        kwargs.setdefault("shared_cache",
+                          env_shared not in ("0", "", "off"))
+    return DSEEngine(**kwargs)
 
 
 SMOKE_SPEC = SweepSpec(n_chips=16,
@@ -118,7 +138,7 @@ def test_parallel_engine_matches_serial_sweep_exactly():
     with caching_disabled():
         serial = _scalar_reference(SMOKE_SPEC)
     clear_caches()
-    engine = DSEEngine(parallel=True, max_workers=2)
+    engine = _engine(parallel=True, max_workers=2)
     par = engine.sweep(_tiny_work, SMOKE_SPEC)
     assert len(par) == len(serial) > 0
     assert [p.row() for p in par] == [p.row() for p in serial]
@@ -137,10 +157,10 @@ def test_perpoint_engine_matches_phased_engine():
     """The retained PR 1 per-point path and the phased path are the same
     sweep, bit for bit."""
     clear_caches()
-    perpoint = DSEEngine(parallel=True, max_workers=2, phased=False)
+    perpoint = _engine(parallel=True, max_workers=2, phased=False)
     a = perpoint.sweep(_tiny_work, SMOKE_SPEC)
     clear_caches()
-    phased = DSEEngine(parallel=True, max_workers=2, phased=True)
+    phased = _engine(parallel=True, max_workers=2, phased=True)
     b = phased.sweep(_tiny_work, SMOKE_SPEC)
     assert [p.row() for p in a] == [p.row() for p in b]
 
@@ -181,7 +201,7 @@ def test_candidate_matrix_shipping_spawn_exactly_once():
     with caching_disabled():
         ref = _scalar_reference(SMOKE_SPEC)
     clear_caches()
-    engine = DSEEngine(parallel=True, max_workers=2, mp_context="spawn")
+    engine = _engine(parallel=True, max_workers=2, mp_context="spawn")
     with warnings.catch_warnings():
         warnings.simplefilter("error")  # a serial fallback would hide bugs
         pts = engine.sweep(_tiny_work, SMOKE_SPEC)
@@ -227,7 +247,7 @@ def test_backend_divergence_is_detected_not_silently_accepted():
 # ------------------------------ streaming ------------------------------------
 def test_sweep_iter_delivers_every_index_exactly_once():
     clear_caches()
-    engine = DSEEngine(parallel=True, max_workers=2)
+    engine = _engine(parallel=True, max_workers=2)
     items = list(engine.sweep_iter(_tiny_work, SMOKE_SPEC))
     grid = SMOKE_SPEC.grid()
     assert sorted(it.index for it in items) == list(range(len(grid)))
@@ -260,7 +280,7 @@ def test_sweep_iter_midstream_pool_failure_keeps_exactly_once():
     """If the pool dies after streaming some items, the serial fallback
     must deliver only the remaining indices — never duplicates."""
     clear_caches()
-    engine = DSEEngine(parallel=True, max_workers=2)
+    engine = _engine(parallel=True, max_workers=2)
     grid = SMOKE_SPEC.grid()
 
     def flaky_parallel_iter(work_fn, spec, g, stop):
@@ -321,6 +341,109 @@ def test_cache_second_run_is_pure_hit_and_identical():
     assert after.hits > before.hits
     assert after.misses == before.misses  # second run never solves cold
     assert [p.row() for p in second] == [p.row() for p in first]
+
+
+# --------------------------- shared memo store -------------------------------
+@pytest.mark.parametrize("method", ["fork", "spawn", "forkserver"])
+def test_shared_cache_sweep_matches_serial(method):
+    """Every pool transport, with the cross-process store attached, must
+    reproduce the scalar reference bit-for-bit, populate the store, and
+    detach + tear it down before the sweep returns."""
+    import multiprocessing
+
+    if method not in multiprocessing.get_all_start_methods():
+        pytest.skip(f"{method} not available on this platform")
+    clear_caches()
+    with caching_disabled():
+        ref = _scalar_reference(SMOKE_SPEC)
+    clear_caches()
+    engine = DSEEngine(parallel=True, max_workers=2, mp_context=method,
+                       shared_cache=True)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # a serial fallback would hide bugs
+        pts = engine.sweep(_tiny_work, SMOKE_SPEC)
+    assert [p.row() for p in pts] == [p.row() for p in ref]
+    stats = engine.last_shared_stats
+    assert stats is not None, "shared store did not run"
+    assert stats["backend"] == ("server" if method == "spawn" else "mmap")
+    assert stats["inserts"] > 0 and stats["entries"] > 0
+    assert stats["misses"] > 0
+    assert GLOBAL_CACHE.shared is None  # torn down, not leaked
+
+
+def test_shared_cache_perpoint_path_matches_serial():
+    clear_caches()
+    with caching_disabled():
+        ref = _scalar_reference(SMOKE_SPEC)
+    clear_caches()
+    engine = _engine(parallel=True, max_workers=2, phased=False,
+                     shared_cache=True)
+    pts = engine.sweep(_tiny_work, SMOKE_SPEC)
+    assert [p.row() for p in pts] == [p.row() for p in ref]
+    assert engine.last_shared_stats is not None
+    assert engine.last_shared_stats["entries"] > 0
+
+
+def test_shared_cache_sweep_iter_exactly_once_and_torn_down():
+    clear_caches()
+    engine = _engine(parallel=True, max_workers=2, shared_cache=True)
+    items = list(engine.sweep_iter(_tiny_work, SMOKE_SPEC))
+    grid = SMOKE_SPEC.grid()
+    assert sorted(it.index for it in items) == list(range(len(grid)))
+    assert GLOBAL_CACHE.shared is None
+    assert engine.last_shared_stats is not None
+    ordered = [it.point for it in sorted(items, key=lambda it: it.index)
+               if it.point is not None]
+    clear_caches()
+    with caching_disabled():
+        ref = _scalar_reference(SMOKE_SPEC)
+    assert [p.row() for p in ordered] == [p.row() for p in ref]
+
+
+def test_shared_cache_serial_engine_runs_without_store():
+    clear_caches()
+    engine = DSEEngine(parallel=False, shared_cache=True)
+    pts = engine.sweep(_tiny_work, SMOKE_SPEC)
+    assert engine.last_shared_stats is None  # no pool → no store
+    assert GLOBAL_CACHE.shared is None
+    with caching_disabled():
+        ref = _scalar_reference(SMOKE_SPEC)
+    assert [p.row() for p in pts] == [p.row() for p in ref]
+
+
+def test_shared_cache_uncached_engine_stays_cold():
+    clear_caches()
+    engine = DSEEngine(parallel=True, max_workers=2, use_cache=False,
+                       shared_cache=True)
+    pts = engine.sweep(_tiny_work, SMOKE_SPEC)
+    assert engine.last_shared_stats is None  # use_cache=False wins
+    assert pts
+
+
+def test_shared_cache_torn_down_on_pool_failure():
+    """An unpicklable work_fn under spawn kills the pool before it runs;
+    the sweep must fall back serially AND tear the store down."""
+    import multiprocessing
+
+    if "spawn" not in multiprocessing.get_all_start_methods():
+        pytest.skip("spawn not available on this platform")
+    clear_caches()
+    unpicklable = lambda system: _tiny_work(system)  # noqa: E731
+    engine = DSEEngine(parallel=True, max_workers=2, mp_context="spawn",
+                       shared_cache=True)
+    with pytest.warns(RuntimeWarning, match="falling back to serial"):
+        pts = engine.sweep(unpicklable, SMOKE_SPEC)
+    assert GLOBAL_CACHE.shared is None  # torn down despite the failure
+    assert engine.last_shared_stats is not None  # stats captured first
+    clear_caches()
+    with caching_disabled():
+        ref = _scalar_reference(SMOKE_SPEC)
+    assert [p.row() for p in pts] == [p.row() for p in ref]
+
+
+def test_engine_rejects_unknown_shared_cache():
+    with pytest.raises(ValueError):
+        DSEEngine(shared_cache="carrier-pigeon")
 
 
 # --------------------------- infeasible points -------------------------------
@@ -419,7 +542,7 @@ def test_serving_scenario_is_inference_only():
 @pytest.mark.parametrize("name", ["llm", "dlrm", "hpl", "fft",
                                   "moe", "mamba2", "serving"])
 def test_smoke_scenarios_sweep_and_have_nonempty_frontier(name):
-    engine = DSEEngine()
+    engine = _engine()
     res = engine.sweep_scenario(name, smoke=True)
     assert res.points, f"{name} smoke sweep returned no design points"
     assert res.frontier, f"{name} smoke sweep has an empty Pareto frontier"

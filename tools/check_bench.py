@@ -14,13 +14,25 @@ Runs the smoke `speedup_report` (the same measurement `benchmarks.run
   engine's headline number) must stay ≥ $DFMODEL_BENCH_MIN_SPEEDUP
   (default 0.8 — the committed baseline is ~1.9×);
 * **cache hit-rate** — the memo-cache hit rate may not drop more than
-  $DFMODEL_BENCH_HIT_DROP (default 0.02 absolute) below the baseline.
+  $DFMODEL_BENCH_HIT_DROP (default 0.02 absolute) below the baseline;
+* **cross-process sharing** — the `cold_parallel_shared` path (the
+  engine with the shared memo store of `repro.core.memo_store`) must be
+  present — its row identity and points/sec floor ride the generic
+  checks above — and its aggregated cross-worker hit count must be
+  ≥ $DFMODEL_BENCH_SHARED_MIN_HITS (default 1: workers provably reused
+  each other's solves), with the shared hit-rate above the absolute
+  floor $DFMODEL_BENCH_SHARED_MIN_RATE (default 0.002 — the rate is
+  pool-scheduling-dependent, so the floor is deliberately loose).
 
 Exit 1 on any regression. `--update` rewrites the committed baseline with
 the fresh numbers instead (run it on the machine that owns the baseline
-after a deliberate perf change).
+after a deliberate perf change). `--fresh-out PATH` (or
+$DFMODEL_BENCH_FRESH_OUT) additionally keeps the freshly measured report
+at PATH — CI uploads it as an artifact when the gate fails, so a
+regression can be diffed against the committed baseline offline.
 
   PYTHONPATH=src python tools/check_bench.py [--update] [--baseline PATH]
+                                             [--fresh-out PATH]
 """
 from __future__ import annotations
 
@@ -37,9 +49,12 @@ sys.path.insert(0, str(REPO / "src"))  # repro package
 BASELINE = REPO / "BENCH_dse.json"
 
 
-def _fresh_report() -> dict:
+def _fresh_report(fresh_out: pathlib.Path | None) -> dict:
     from benchmarks.bench_dse import speedup_report
 
+    if fresh_out is not None:
+        speedup_report("llm", smoke=True, json_path=fresh_out)
+        return json.loads(fresh_out.read_text())
     with tempfile.TemporaryDirectory() as tmp:
         path = pathlib.Path(tmp) / "BENCH_dse.json"
         speedup_report("llm", smoke=True, json_path=path)
@@ -52,9 +67,16 @@ def _hit_rate(report: dict) -> float:
     return cache.get("hits", 0) / total if total else 0.0
 
 
+def _shared_hit_rate(report: dict) -> float:
+    shared = report.get("shared_cache") or {}
+    total = shared.get("hits", 0) + shared.get("misses", 0)
+    return shared.get("hits", 0) / total if total else 0.0
+
+
 def compare(fresh: dict, base: dict,
             slowdown: float, min_speedup: float,
-            hit_drop: float) -> list[str]:
+            hit_drop: float, shared_min_hits: int = 1,
+            shared_min_rate: float = 0.002) -> list[str]:
     """Return a list of human-readable regression messages (empty = pass)."""
     problems: list[str] = []
     if not fresh.get("rows_identical", False):
@@ -81,6 +103,28 @@ def compare(fresh: dict, base: dict,
         problems.append(
             f"cache hit-rate {fresh_hr:.3f} < baseline {base_hr:.3f} "
             f"- {hit_drop:g}")
+    # the cross-process shared-store row: the sweep must have run with the
+    # shared memo store attached AND workers must actually have reused
+    # each other's solves (row identity + throughput ride the generic
+    # checks above once the row is in the baseline)
+    if "cold_parallel_shared" not in fresh.get("paths", {}):
+        problems.append("path 'cold_parallel_shared' missing: the shared "
+                        "memo store sweep did not run")
+    shared = fresh.get("shared_cache") or {}
+    if shared.get("hits", 0) < shared_min_hits:
+        problems.append(
+            f"shared-store cross-worker hits {shared.get('hits', 0)} < "
+            f"{shared_min_hits}: sweep workers no longer reuse each "
+            f"other's solves")
+    # absolute floor, not baseline-relative: how much of the key overlap
+    # lands cross-worker depends on pool scheduling (which worker starts
+    # first), so the rate is noisy — the floor certifies genuine reuse
+    # without gating on scheduler luck
+    fresh_shr = _shared_hit_rate(fresh)
+    if fresh_shr < shared_min_rate:
+        problems.append(
+            f"shared-store hit-rate {fresh_shr:.4f} < floor "
+            f"{shared_min_rate:g} (baseline {_shared_hit_rate(base):.4f})")
     return problems
 
 
@@ -90,13 +134,21 @@ def main() -> int:
                     help=f"baseline JSON (default {BASELINE})")
     ap.add_argument("--update", action="store_true",
                     help="rewrite the baseline with fresh numbers")
+    ap.add_argument("--fresh-out", type=pathlib.Path,
+                    default=os.environ.get("DFMODEL_BENCH_FRESH_OUT") or None,
+                    help="also keep the fresh report at this path (CI "
+                         "uploads it as an artifact on failure)")
     args = ap.parse_args()
 
     slowdown = float(os.environ.get("DFMODEL_BENCH_SLOWDOWN", "4.0"))
     min_speedup = float(os.environ.get("DFMODEL_BENCH_MIN_SPEEDUP", "0.8"))
     hit_drop = float(os.environ.get("DFMODEL_BENCH_HIT_DROP", "0.02"))
+    shared_min_hits = int(os.environ.get("DFMODEL_BENCH_SHARED_MIN_HITS",
+                                         "1"))
+    shared_min_rate = float(os.environ.get("DFMODEL_BENCH_SHARED_MIN_RATE",
+                                           "0.002"))
 
-    fresh = _fresh_report()
+    fresh = _fresh_report(args.fresh_out)
     if args.update:
         args.baseline.write_text(json.dumps(fresh, indent=2) + "\n")
         print(f"bench baseline updated: {args.baseline} "
@@ -108,19 +160,29 @@ def main() -> int:
               f"run with --update to create one", file=sys.stderr)
         return 1
     base = json.loads(args.baseline.read_text())
-    problems = compare(fresh, base, slowdown, min_speedup, hit_drop)
+    problems = compare(fresh, base, slowdown, min_speedup, hit_drop,
+                       shared_min_hits=shared_min_hits,
+                       shared_min_rate=shared_min_rate)
     for path, vals in fresh.get("paths", {}).items():
         print(f"  {path:20s} {vals['points_per_s']:10.1f} points/s "
               f"(baseline "
               f"{base.get('paths', {}).get(path, {}).get('points_per_s', 0.0):10.1f})")
+    shared = fresh.get("shared_cache") or {}
+    print(f"  shared store [{shared.get('backend', '-')}]: "
+          f"{shared.get('hits', 0)} cross-worker hits, "
+          f"{shared.get('entries', 0)} entries, hit rate "
+          f"{_shared_hit_rate(fresh):.3f}")
     if problems:
         print("bench gate: REGRESSION", file=sys.stderr)
         for p in problems:
             print(f"  - {p}", file=sys.stderr)
+        if args.fresh_out is not None:
+            print(f"bench gate: fresh report kept at {args.fresh_out}",
+                  file=sys.stderr)
         return 1
     print(f"bench gate: PASS (rows identical, warm phased speedup "
           f"{fresh['speedup_phased_vs_perpoint']:.2f}x, hit rate "
-          f"{_hit_rate(fresh):.3f})")
+          f"{_hit_rate(fresh):.3f}, shared hits {shared.get('hits', 0)})")
     return 0
 
 

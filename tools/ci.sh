@@ -4,8 +4,22 @@
 #   tools/ci.sh            # install dev deps, run tests + smoke benches
 #   tools/ci.sh --no-install   # offline container: skip pip, tests still
 #                              # collect (hypothesis tests skip themselves)
+#
+# Every gate ends with an explicit "<gate>: PASS" (or ": SKIP (reason)")
+# line so offline-container logs are unambiguous; the first failure stops
+# the script with the failing gate named.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+gate() {  # gate <name> <cmd...> — run, then print "<name>: PASS"
+    local name="$1"; shift
+    if "$@"; then
+        echo "$name: PASS"
+    else
+        echo "$name: FAIL" >&2
+        exit 1
+    fi
+}
 
 if [[ "${1:-}" != "--no-install" ]]; then
     python -m pip install -r requirements-dev.txt \
@@ -14,11 +28,32 @@ fi
 
 # the seed regression this gate exists for: collection must never fail,
 # with or without the dev extras installed
-PYTHONPATH=src python -m pytest -x -q
+gate "tests" env PYTHONPATH=src python -m pytest -x -q
+
+# engine matrix: the DSEEngine + cross-process shared memo store under
+# every pool transport this platform offers. This local mirror runs the
+# store-ON legs only — the "tests" gate above already ran the full suite
+# in the default configuration (fork transport, store off), and these
+# legs run serially here; the workflow's engine-matrix job fans the full
+# 3 × {on, off} grid out across parallel runners.
+for method in fork spawn forkserver; do
+    if ! python -c "import multiprocessing as m, sys; \
+sys.exit(0 if '$method' in m.get_all_start_methods() else 1)"; then
+        echo "engine matrix [$method shared=1]: SKIP (start method unavailable)"
+        continue
+    fi
+    gate "engine matrix [$method shared=1]" \
+        env PYTHONPATH=src DFMODEL_TEST_MP_CONTEXT=$method \
+            DFMODEL_TEST_SHARED_CACHE=1 \
+            python -m pytest -x -q tests/test_memo_store.py \
+                tests/test_dse_engine.py
+done
 
 # smoke benches: exercises the DSE engine end-to-end (parallel sweep,
-# memo cache, Pareto frontier, serial-vs-engine row identity)
-PYTHONPATH=src python -m benchmarks.run --smoke
+# memo cache + shared store, Pareto frontier, serial-vs-engine row
+# identity). `benchmarks` is a real package, so `-m benchmarks.run`
+# resolves from the repo root — the same layout check_bench.py imports.
+gate "smoke benchmarks" env PYTHONPATH=src python -m benchmarks.run --smoke
 
 # pricing backends: the phased smoke sweep must reproduce the scalar
 # reference bit-for-bit on every batched backend. The jax and pallas legs
@@ -30,11 +65,15 @@ for backend in numpy jax pallas; do
         echo "pricing backend $backend: SKIP (no jax)"
         continue
     fi
-    PYTHONPATH=src DFMODEL_PRICING_BACKEND=$backend \
-        python tools/check_pricing_backend.py
+    gate "pricing backend $backend" \
+        env PYTHONPATH=src DFMODEL_PRICING_BACKEND=$backend \
+            python tools/check_pricing_backend.py
 done
 
 # bench-regression gate: fresh smoke BENCH_dse.json vs the committed
-# baseline (row identity, points/sec floor, warm phased speedup, memo
-# cache hit-rate) — see tools/check_bench.py for the tolerances
-PYTHONPATH=src python tools/check_bench.py
+# baseline (row identity, points/sec floors, warm phased speedup, memo
+# cache hit-rate, shared-store cross-worker hits) — tolerances in
+# tools/check_bench.py
+gate "bench regression" env PYTHONPATH=src python tools/check_bench.py
+
+echo "ci.sh: all gates passed"
