@@ -110,8 +110,13 @@ def speedup_report(scenario_name: str = "llm", smoke: bool = True,
       pricing call.
     * ``parallel_perpoint`` — per-point eval in a process pool.
     * ``parallel_phased``   — the engine default: plan groups in the pool
-      shipping candidate matrices, batched selection-certify + pricing in
-      the parent.
+      shipping (pruned) candidate matrices + survivor index maps, batched
+      selection-certify + pricing in the parent, candidate pruning ON.
+    * ``parallel_phased_noprune`` — the same engine with ``prune="off"``:
+      every enumerated candidate priced, the PR 3 baseline. The report's
+      ``prune`` block pairs this with ``parallel_phased`` — identical
+      rows, strictly fewer priced candidates — which
+      ``tools/check_bench.py`` gates on.
     * ``cold_parallel_shared`` — the phased parallel path with the
       cross-process shared memo store (``DSEEngine(shared_cache=True)``,
       :mod:`repro.core.memo_store`): every worker reuses every other
@@ -170,6 +175,10 @@ def speedup_report(scenario_name: str = "llm", smoke: bool = True,
     stats = cache_stats()
     measure("parallel_perpoint", lambda: perpoint.sweep(sc.work_fn, spec))
     measure("parallel_phased", lambda: phased.sweep(sc.work_fn, spec))
+    plan_stats = phased.last_plan_stats or {}
+    noprune = DSEEngine(phased=True, prune="off")
+    measure("parallel_phased_noprune",
+            lambda: noprune.sweep(sc.work_fn, spec))
     # parallel=True + ≥2 workers: the shared row must exercise a real
     # multi-process pool even on a single-core runner (where "auto"
     # would stay serial and never create the store, failing the gate's
@@ -210,6 +219,27 @@ def speedup_report(scenario_name: str = "llm", smoke: bool = True,
         # reuse (shared_cache.hits > 0) with bit-identical rows.
         "speedup_shared_vs_parallel_phased": ratio("parallel_phased",
                                                    "cold_parallel_shared"),
+        # candidate pruning: the prune-on engine vs its prune-off twin on
+        # the same cold grid. The gated invariants: identical winners
+        # (both rows ride the global rows_identical check too), strictly
+        # fewer candidate rows priced, throughput not below the unpruned
+        # engine's floor.
+        "prune": {
+            "enabled": bool(plan_stats.get("prune", False)),
+            "enumerated": plan_stats.get("enumerated", 0),
+            "survived": plan_stats.get("survived", 0),
+            "priced": plan_stats.get("priced", 0),
+            "scalar_certified_groups":
+                plan_stats.get("scalar_certified_groups", 0),
+            "shrink": (plan_stats.get("priced", 0)
+                       / plan_stats.get("enumerated", 1)
+                       if plan_stats.get("enumerated") else 1.0),
+            "winners_identical": (rows_by_path["parallel_phased"]
+                                  == rows_by_path["parallel_phased_noprune"]),
+            "points_per_s_on": paths["parallel_phased"]["points_per_s"],
+            "points_per_s_off":
+                paths["parallel_phased_noprune"]["points_per_s"],
+        },
         "shared_cache": shared_stats,
         "cache": {"hits": stats.hits, "misses": stats.misses,
                   "entries": stats.entries,
@@ -229,6 +259,8 @@ def speedup_report(scenario_name: str = "llm", smoke: bool = True,
                     report["speedup_phased_vs_perpoint_parallel"],
                 "vs_serial_uncached":
                     report["speedup_engine_vs_serial_uncached"]})
+    out.append({"path": "prune", "workload": scenario_name,
+                **report["prune"]})
     out.extend(stats.rows())
     if shared_stats is not None:
         out.append({"space": "SHARED", "backend": shared_stats["backend"],

@@ -16,6 +16,12 @@ Public surface:
                         streaming: DSEEngine.sweep_iter → SweepItem
   candidates (columnar): CandidateSet, candidate_matrix, select_plans —
                         the batched (tp, pp, dp) × dim-assignment argmin
+  pruning             : PrunedCandidates, prune_matrix, select_candidates —
+                        hard feasibility mask + dominance filter applied
+                        columnar before pricing (prune= policy on
+                        candidate_matrix / select_plan(s) / sweep /
+                        DSEEngine; winners certified identical to the
+                        unpruned scalar scan)
   pricing (batched)   : PlanVector, PlanMatrix, price_plans,
                         price_plan_scalar, stack_plans, batched_roofline
                         (numpy | jax.vmap | pallas interpret kernel)
@@ -33,9 +39,11 @@ from .sharding import Scheme, ShardingSolution, solve_sharding
 from .solver import (branch_and_bound, bounds_to_assign, design_space_size,
                      enumerate_parallelism, minmax_partition, minsum_partition)
 from .utilization import gemm_utilization, kernel_utilization
-from .interchip import (CandidateSet, InterChipPlan, TrainWorkload,
-                        candidate_matrix, candidate_plans,
-                        optimize_inter_chip, select_plan, select_plans)
+from .interchip import (CandidateSet, InterChipPlan, PrunedCandidates,
+                        SelectionResult, TrainWorkload, candidate_matrix,
+                        candidate_plans, default_prune, optimize_inter_chip,
+                        prune_matrix, resolve_prune, select_candidates,
+                        select_plan, select_plans)
 from .intrachip import IntraChipResult, optimize_intra_chip
 from .roofline import (HierPoint, RooflineTerms, V5E_HBM_BW, V5E_ICI_BW,
                        V5E_PEAK_FLOPS)
@@ -63,8 +71,10 @@ __all__ = [
     "branch_and_bound", "bounds_to_assign", "design_space_size",
     "enumerate_parallelism", "minmax_partition", "minsum_partition",
     "gemm_utilization", "kernel_utilization",
-    "CandidateSet", "InterChipPlan", "TrainWorkload", "candidate_matrix",
-    "candidate_plans", "optimize_inter_chip", "select_plan", "select_plans",
+    "CandidateSet", "InterChipPlan", "PrunedCandidates", "SelectionResult",
+    "TrainWorkload", "candidate_matrix", "candidate_plans", "default_prune",
+    "optimize_inter_chip", "prune_matrix", "resolve_prune",
+    "select_candidates", "select_plan", "select_plans",
     "IntraChipResult", "optimize_intra_chip",
     "HierPoint", "RooflineTerms", "V5E_HBM_BW", "V5E_ICI_BW",
     "V5E_PEAK_FLOPS",

@@ -75,8 +75,9 @@ from ..systems.topology import TOPOLOGIES
 from .costpower import (cost_efficiency, power_efficiency,
                         system_efficiency_terms)
 from .interchip import (InterChipPlan, TrainWorkload, _work_key,
-                        candidate_matrix, certify_winner_rows,
-                        optimize_inter_chip, select_plans, select_rows)
+                        candidate_matrix, certify_scalar_rows,
+                        certify_winner_rows, optimize_inter_chip,
+                        resolve_prune, select_candidates)
 from .intrachip import IntraChipResult, optimize_intra_chip
 from .memo import GLOBAL_CACHE
 from .pricing import PlanMatrix, PlanVector, default_backend, price_plans
@@ -160,7 +161,8 @@ def sweep(work_fn: Callable[[SystemSpec], TrainWorkload],
           mem_net: Iterable[tuple[str, str]] = DEFAULT_MEM_NET,
           max_tp: int | None = 64, max_pp: int | None = None,
           execution: str = "auto", phased: bool = True,
-          pricing_backend: str = "auto") -> list[DesignPoint]:
+          pricing_backend: str = "auto",
+          prune: str | bool = "auto") -> list[DesignPoint]:
     """The 80-system cartesian sweep (4 chips × 5 topologies × 4 mem/net),
     evaluated in grid order.
 
@@ -168,13 +170,18 @@ def sweep(work_fn: Callable[[SystemSpec], TrainWorkload],
     everything in one batched call; ``phased=False`` is the serial scalar
     reference (one ``evaluate_design_point`` per cell). Both return
     element-identical ``DesignPoint`` lists — the property
-    ``tests/test_pricing.py`` certifies.
+    ``tests/test_pricing.py`` certifies. ``prune`` (phased path only)
+    controls the candidate-pruning stage: ``"auto"`` (default; env
+    ``DFMODEL_PRUNE``, else on) masks memory-infeasible and dominated
+    candidates before pricing — certified winner-preserving, so the
+    output is identical either way.
     """
     cells = design_grid(chips, mem_net, topologies)
     if phased:
         planned = plan_design_cells(work_fn, cells, n_chips, max_tp=max_tp,
                                     max_pp=max_pp, execution=execution,
-                                    pricing_backend=pricing_backend)
+                                    pricing_backend=pricing_backend,
+                                    prune=prune)
         return price_planned(planned, backend=pricing_backend)
     points: list[DesignPoint] = []
     for cell in cells:
@@ -302,11 +309,23 @@ class PlannedGroup:
 
     indices: tuple[int, ...]            # positions into the caller's cells
     capacities: tuple[float, ...]       # memory capacity per cell
-    matrix: PlanMatrix                  # candidate pricing columns (may be
-                                        # empty when not shipped)
+    matrix: PlanMatrix                  # candidate pricing columns — the
+                                        # PRUNED (surviving-row) matrix when
+                                        # pruning ran (may be empty when not
+                                        # shipped)
     n_candidates: int                   # size of the candidate enumeration
-    winner_rows: tuple[int, ...]        # candidate row per cell (-1: none)
+    winner_rows: tuple[int, ...]        # candidate row per cell (-1: none),
+                                        # ORIGINAL-enumeration indexing
     planned: list[PlannedPoint | None]  # aligned with ``indices``
+    #: Original-enumeration index of each shipped matrix row (``None``
+    #: when the matrix rows ARE the enumeration, i.e. pruning off).
+    survivors: tuple[int, ...] | None = None
+    #: Per-group pruning accounting (enumerated/survived/priced/...).
+    prune_stats: dict | None = None
+    #: The UNPRUNED matrix, shipped only for the sampled certification
+    #: subset: the parent re-prices it and certifies the shipped winners
+    #: against the full scalar scan.
+    full_matrix: PlanMatrix | None = None
 
 
 def _group_cells(work_fn, cells: Sequence[GridCell], n_chips: int,
@@ -324,57 +343,105 @@ def _group_cells(work_fn, cells: Sequence[GridCell], n_chips: int,
             for idxs in groups.values()]
 
 
+#: Sampled-certification cadence: every ``CERTIFY_EVERY``-th system group
+#: of a :func:`plan_design_groups` call has its pruned selection checked
+#: against the full scalar scan (and ships its unpruned matrix to the
+#: engine parent for an independent re-priced check). Group order is
+#: deterministic, so the sample is too.
+CERTIFY_EVERY = 4
+
+
 def plan_design_groups(work_fn: Callable[[SystemSpec], TrainWorkload],
                        cells: Sequence[GridCell], n_chips: int,
                        max_tp: int | None = 64, max_pp: int | None = None,
                        execution: str = "auto",
                        pricing_backend: str = "numpy",
-                       ship_matrix: bool = True) -> list[PlannedGroup]:
+                       ship_matrix: bool = True,
+                       prune: str | bool = "auto",
+                       certify: bool | str = "sample") -> list[PlannedGroup]:
     """Plan phase emitting one :class:`PlannedGroup` per system group.
 
     Per group: one columnar candidate enumeration
-    (``interchip.candidate_matrix``), one batched selection covering every
-    memory variant (``interchip.select_plans`` — a single ``price_plans``
-    call + lexicographic argmin per capacity), then the intra-chip pass
-    and full :class:`~repro.core.pricing.PlanVector` for each winner only.
+    (``interchip.candidate_matrix``), the pruning stage (hard feasibility
+    mask + dominance filter over the cheap selection prepass, per
+    ``prune``), then one batched selection covering every memory variant
+    (``interchip.select_candidates`` — a single ``price_plans`` call over
+    the SURVIVING rows + lexicographic argmin per capacity), then the
+    intra-chip pass and full :class:`~repro.core.pricing.PlanVector` for
+    each winner only.
 
     Winners are always selected on the **numpy reference** columns. A
-    non-numpy ``pricing_backend`` prices the same candidate matrix a
-    second time and must reproduce the reference argmin row-for-row
+    non-numpy ``pricing_backend`` prices the same (pruned) candidate rows
+    a second time and must reproduce the reference argmin row-for-row
     (:func:`interchip.certify_winner_rows`) — so a drifting backend can
-    never silently change a winner. ``ship_matrix=False`` replaces the
-    matrix in the emitted groups with an empty one (the engine's
-    numpy-parent path, which would never read it).
+    never silently change a winner. With pruning on, a *sampled* subset
+    of groups has its winners additionally certified against the literal
+    scalar scan over the FULL enumeration — so a filter bug can never
+    silently drop a winner either. ``certify`` picks the sample:
+    ``"sample"`` (the default, for direct multi-group calls) certifies
+    every :data:`CERTIFY_EVERY`-th group of this call; ``True``/``False``
+    certify all/none of the call's groups — the engine passes these
+    per-task, since its tasks hold one group each and a call-local
+    cadence would degenerate to all-or-nothing.
+
+    ``ship_matrix=False`` replaces the matrix in the emitted groups with
+    an empty one (the engine's numpy-parent path, which would never read
+    it); certified groups of a ``certify=True`` call also carry the
+    unpruned matrix so the engine parent can repeat the scalar-scan
+    certification on its side of the IPC boundary.
     """
     backend = (default_backend() if pricing_backend == "auto"
                else pricing_backend)
+    pruning = resolve_prune(prune)
     out: list[PlannedGroup] = []
-    for idxs, work, systems in _group_cells(work_fn, cells, n_chips,
-                                            execution):
+    for gi, (idxs, work, systems) in enumerate(_group_cells(
+            work_fn, cells, n_chips, execution)):
         cands = candidate_matrix(work, systems[0], max_tp=max_tp,
-                                 max_pp=max_pp, execution=execution)
+                                 max_pp=max_pp, execution=execution,
+                                 prune=prune)
         caps = tuple(s.memory.capacity for s in systems)
-        plans = select_plans(cands, caps)        # numpy reference winners
-        rows, _ = select_rows(cands, caps)       # cached priced columns
+        sel = select_candidates(cands, caps, prune=prune)  # numpy winners
+        sampled = pruning and (gi % CERTIFY_EVERY == 0
+                               if certify == "sample" else bool(certify))
+        if sampled and len(cands):
+            certify_scalar_rows([p.iter_time for p in cands.plans],
+                                [p.per_chip_mem_bytes for p in cands.plans],
+                                caps, sel.rows, context=f"group {gi}")
         if len(cands) and backend != "numpy":
-            check = cands.priced(backend)
+            check = (cands.pruned(max(caps)).priced(backend) if pruning
+                     else cands.priced(backend))
             certify_winner_rows(check["iter_time"],
-                                check["per_chip_mem_bytes"], caps, rows,
-                                backend)
+                                check["per_chip_mem_bytes"], caps,
+                                sel.rows, backend, survivors=sel.survivors)
         planned: list[PlannedPoint | None] = []
-        for pos, system, plan in zip(idxs, systems, plans):
-            if plan is None:
+        for pos, system, cap, row, lrow in zip(idxs, systems, caps,
+                                               sel.rows, sel.local_rows):
+            if row < 0:
                 planned.append(None)
                 continue
+            plan = dataclasses.replace(
+                cands.plans[row],
+                feasible=bool(sel.priced["per_chip_mem_bytes"][lrow] <= cap))
             intra = _intra_refine(work, system, plan, execution)
             planned.append(PlannedPoint(cells[pos], system, plan,
                                         _plan_vector(work, system, plan,
                                                      intra)))
+        if ship_matrix:
+            matrix = (cands.pruned(max(caps)).matrix
+                      if pruning and len(cands) else cands.matrix)
+        else:
+            matrix = PlanMatrix.concat([])
         out.append(PlannedGroup(
-            indices=tuple(idxs), capacities=caps,
-            matrix=cands.matrix if ship_matrix else PlanMatrix.concat([]),
+            indices=tuple(idxs), capacities=caps, matrix=matrix,
             n_candidates=len(cands),
-            winner_rows=tuple(rows), planned=planned))
+            winner_rows=tuple(sel.rows), planned=planned,
+            survivors=(tuple(int(s) for s in sel.survivors)
+                       if ship_matrix and sel.survivors is not None
+                       else None),
+            prune_stats=dict(sel.stats,
+                             scalar_certified=bool(sampled and len(cands))),
+            full_matrix=(cands.matrix if certify is True and sampled
+                         and len(cands) else None)))
     return out
 
 
@@ -382,7 +449,9 @@ def plan_design_cells(work_fn: Callable[[SystemSpec], TrainWorkload],
                       cells: Sequence[GridCell], n_chips: int,
                       max_tp: int | None = 64, max_pp: int | None = None,
                       execution: str = "auto",
-                      pricing_backend: str = "numpy"
+                      pricing_backend: str = "numpy",
+                      prune: str | bool = "auto",
+                      certify: bool | str = "sample"
                       ) -> list[PlannedPoint | None]:
     """Plan phase over a list of grid cells (output aligned to ``cells``).
 
@@ -391,11 +460,15 @@ def plan_design_cells(work_fn: Callable[[SystemSpec], TrainWorkload],
     and one batched selection call (:func:`plan_design_groups`); only the
     capacity check and intra-chip pass run per cell. ``None`` marks an
     undecomposable cell, mirroring :func:`evaluate_design_point`.
+    ``certify`` passes straight through — callers streaming one cell per
+    call must pick the sample themselves (the call-local ``"sample"``
+    cadence would certify every single-group call).
     """
     out: list[PlannedPoint | None] = [None] * len(cells)
     for group in plan_design_groups(work_fn, cells, n_chips, max_tp=max_tp,
                                     max_pp=max_pp, execution=execution,
-                                    pricing_backend=pricing_backend):
+                                    pricing_backend=pricing_backend,
+                                    prune=prune, certify=certify):
         for pos, planned in zip(group.indices, group.planned):
             out[pos] = planned
     return out

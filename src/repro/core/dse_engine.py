@@ -55,11 +55,12 @@ import warnings
 from typing import Callable, Iterable, Iterator, Sequence
 
 from ..systems.system import SystemSpec
-from .dse import (DEFAULT_CHIPS, DEFAULT_MEM_NET, DEFAULT_TOPOLOGIES,
-                  DesignPoint, GridCell, PlannedGroup, PlannedPoint,
-                  design_grid, evaluate_design_point, plan_design_cells,
-                  plan_design_groups, price_planned)
-from .interchip import TrainWorkload, certify_winner_rows
+from .dse import (CERTIFY_EVERY, DEFAULT_CHIPS, DEFAULT_MEM_NET,
+                  DEFAULT_TOPOLOGIES, DesignPoint, GridCell, PlannedGroup,
+                  PlannedPoint, design_grid, evaluate_design_point,
+                  plan_design_cells, plan_design_groups, price_planned)
+from .interchip import (TrainWorkload, certify_scalar_rows,
+                        certify_winner_rows, resolve_prune)
 from .memo import GLOBAL_CACHE, caching_disabled
 from .memo_store import StoreHandle, choose_backend, create_store
 from .pricing import PlanMatrix, price_plans
@@ -204,21 +205,25 @@ def _remap_group(group: PlannedGroup,
         group, indices=tuple(idxs[p] for p in group.indices))
 
 
-def _plan_group_index(idxs: tuple[int, ...]) -> list[PlannedGroup]:
+def _plan_group_index(task: tuple) -> list[PlannedGroup]:
+    idxs, certify = task
     ctx = _WORKER_CTX
     cells = [ctx["grid"][i] for i in idxs]
     groups = plan_design_groups(ctx["work_fn"], cells, ctx["n_chips"],
                                 max_tp=ctx["max_tp"], max_pp=ctx["max_pp"],
                                 execution=ctx["execution"],
-                                ship_matrix=ctx["ship_matrix"])
+                                ship_matrix=ctx["ship_matrix"],
+                                prune=ctx["prune"], certify=certify)
     return [_remap_group(g, idxs) for g in groups]
 
 
 def _plan_group_args(args: tuple) -> list[PlannedGroup]:
-    work_fn, cells, idxs, n_chips, max_tp, max_pp, execution, ship = args
+    (work_fn, cells, idxs, n_chips, max_tp, max_pp, execution, ship,
+     prune, certify) = args
     groups = plan_design_groups(work_fn, cells, n_chips, max_tp=max_tp,
                                 max_pp=max_pp, execution=execution,
-                                ship_matrix=ship)
+                                ship_matrix=ship, prune=prune,
+                                certify=certify)
     return [_remap_group(g, idxs) for g in groups]
 
 
@@ -295,6 +300,19 @@ class DSEEngine:
         store lives for one sweep: it is created next to the pool and torn
         down — even on pool failure — before the sweep returns, leaving
         its aggregated cross-process stats in ``last_shared_stats``.
+    prune:
+        Candidate-pruning policy for the phased plan phase: ``"on"``,
+        ``"off"``, a bool, or ``"auto"`` (env var ``DFMODEL_PRUNE``, else
+        on). With pruning on, workers apply the hard feasibility mask +
+        dominance filter (``interchip.prune_matrix``) before pricing and
+        ship the compacted matrix plus its survivor index map; the
+        parent's batched re-pricing (including the pallas kernel path)
+        then covers only surviving rows, and every sampled group's
+        winners are re-certified against the full scalar scan on the
+        parent's side of the IPC boundary. Winners are certified
+        bit-identical to the unpruned reference either way; pruning only
+        shrinks how many rows get priced (``last_plan_stats`` reports
+        enumerated / survived / priced).
     """
 
     def __init__(self, max_workers: int | None = None,
@@ -304,7 +322,8 @@ class DSEEngine:
                  = None,
                  phased: bool = True,
                  pricing_backend: str = "auto",
-                 shared_cache: bool | str = False) -> None:
+                 shared_cache: bool | str = False,
+                 prune: str | bool = "auto") -> None:
         self.max_workers = max_workers or (os.cpu_count() or 1)
         self.parallel = parallel
         self.use_cache = use_cache
@@ -321,6 +340,8 @@ class DSEEngine:
                 f"shared_cache {shared_cache!r}; expected False, True, "
                 f"'auto', 'mmap' or 'server'")
         self.shared_cache = shared_cache
+        resolve_prune(prune)  # reject unknown policies at construction
+        self.prune = prune
         #: Plan-phase accounting of the last parallel phased sweep:
         #: {"groups", "candidates", "cells", "backend"} — the exactly-once
         #: candidate-matrix shipping contract tests/test_dse_engine.py
@@ -357,10 +378,17 @@ class DSEEngine:
                               stacklevel=2)
         if planned is None:
             with self._cache_mode():
-                planned = plan_design_cells(
+                # the serial phased path goes through the same group
+                # reduce as the pool path, so ``last_plan_stats`` (incl.
+                # the pruning accounting) is populated either way; the
+                # matrices are not shipped anywhere — backend and sampled
+                # scalar certification already ran inside the call
+                groups = plan_design_groups(
                     work_fn, grid, spec.n_chips, max_tp=spec.max_tp,
                     max_pp=spec.max_pp, execution=spec.execution,
-                    pricing_backend=self.pricing_backend)
+                    pricing_backend=self.pricing_backend,
+                    ship_matrix=False, prune=self.prune)
+                planned = self._finish_plan_groups(groups, len(grid))
         return price_planned(planned, backend=self.pricing_backend)
 
     def sweep_iter(self, work_fn: Callable[[SystemSpec], TrainWorkload],
@@ -585,17 +613,29 @@ class DSEEngine:
         """(worker fn, payload per group, cleanup-needed) for the pool."""
         groups = _group_indices(grid)
         ship = self._resolved_backend() != "numpy"
+        # sampled prune certification: every CERTIFY_EVERY-th task's
+        # worker runs the in-call scalar-scan check AND attaches the
+        # unpruned matrix so the parent can re-price and re-run the scan
+        # independently across the IPC boundary. The sample is chosen
+        # HERE per task (tasks are one system group each, so a call-local
+        # cadence would degenerate to all-or-nothing) and is
+        # deterministic in grid order.
+        prune_on = self._resolved_prune()
+        certify = [prune_on and ti % CERTIFY_EVERY == 0
+                   for ti in range(len(groups))]
         method = self._start_method()
         if method != "fork":
             _require_picklable(work_fn)
             payload = [(work_fn, [grid[i] for i in idxs], idxs, spec.n_chips,
-                        spec.max_tp, spec.max_pp, spec.execution, ship)
-                       for idxs in groups]
+                        spec.max_tp, spec.max_pp, spec.execution, ship,
+                        self.prune, cert)
+                       for idxs, cert in zip(groups, certify)]
             return _plan_group_args, payload, False
         _WORKER_CTX.update(work_fn=work_fn, grid=grid, n_chips=spec.n_chips,
                            max_tp=spec.max_tp, max_pp=spec.max_pp,
-                           execution=spec.execution, ship_matrix=ship)
-        return _plan_group_index, groups, True
+                           execution=spec.execution, ship_matrix=ship,
+                           prune=self.prune)
+        return _plan_group_index, list(zip(groups, certify)), True
 
     def _parallel_plan(self, work_fn, spec: SweepSpec, grid
                        ) -> list[PlannedPoint | None]:
@@ -623,14 +663,20 @@ class DSEEngine:
                             ) -> list[PlannedPoint | None]:
         """Reduce worker-shipped plan groups into a grid-aligned list.
 
-        With a non-numpy backend, the shipped candidate matrices are
-        row-concatenated and priced in ONE batched ``price_plans`` call —
-        every candidate of every memory variant of every system — and the
-        resulting per-group argmins are certified against the workers'
+        With a non-numpy backend, the shipped candidate matrices —
+        PRUNED to the surviving rows when pruning ran — are
+        row-concatenated and priced in ONE batched ``price_plans`` call,
+        and the resulting per-group argmins (remapped through each
+        group's survivor index map) are certified against the workers'
         numpy selection before the winners are accepted. When the backend
         resolves to numpy (the workers' own reference), re-pricing the
         identical deterministic formula could never disagree, so the
         duplicate whole-grid pass is skipped.
+
+        Independently of the backend, every sampled group that shipped
+        its unpruned matrix is re-priced on the numpy reference and its
+        winners re-certified against the literal full scalar scan — the
+        parent-side proof that the pruning filters dropped no winner.
         """
         backend = self._resolved_backend()
         live = [g for g in groups if len(g.matrix)]
@@ -644,18 +690,45 @@ class DSEEngine:
                     priced["iter_time"][off:off + n],
                     priced["per_chip_mem_bytes"][off:off + n], g)
                 off += n
+        parent_certified = sum(self._certify_group_prune(g) for g in groups)
         out: list[PlannedPoint | None] = [None] * n_cells
         for g in groups:
             for i, planned in zip(g.indices, g.planned):
                 out[i] = planned
+        prune_on = self._resolved_prune()
+        pstats = [g.prune_stats for g in groups if g.prune_stats]
         self.last_plan_stats = {
             "groups": len(groups),
             "candidates": sum(g.n_candidates for g in groups),
             "cells": sum(len(g.indices) for g in groups),
             "backend": backend,
             "verified": backend != "numpy",
+            "prune": prune_on,
+            "enumerated": sum(s["enumerated"] for s in pstats),
+            "survived": sum(s["survived"] for s in pstats),
+            "priced": sum(s["priced"] for s in pstats),
+            # groups whose winners were certified against the full scalar
+            # scan anywhere (in the planning call, serial or worker), and
+            # the subset the parent independently re-priced + re-certified
+            # from a shipped unpruned matrix
+            "scalar_certified_groups": sum(
+                1 for s in pstats if s.get("scalar_certified")),
+            "parent_certified_groups": parent_certified,
         }
         return out
+
+    def _certify_group_prune(self, group: PlannedGroup) -> bool:
+        """Parent-side sampled pruning certification: re-price the
+        group's unpruned matrix on the numpy reference and require the
+        shipped winners to reproduce the full scalar scan bit-for-bit."""
+        if group.full_matrix is None or not len(group.full_matrix):
+            return False
+        priced = price_plans(group.full_matrix.cols, backend="numpy")
+        certify_scalar_rows(priced["iter_time"].tolist(),
+                            priced["per_chip_mem_bytes"].tolist(),
+                            group.capacities, group.winner_rows,
+                            context=f"parent certify, cells {group.indices}")
+        return True
 
     def _resolved_backend(self) -> str:
         from .pricing import default_backend
@@ -663,19 +736,28 @@ class DSEEngine:
         return (default_backend() if self.pricing_backend == "auto"
                 else self.pricing_backend)
 
+    def _resolved_prune(self) -> bool:
+        return resolve_prune(self.prune)
+
     def _verify_group_winners(self, iter_time, mem,
                               group: PlannedGroup) -> None:
         certify_winner_rows(iter_time, mem, group.capacities,
-                            group.winner_rows, self._resolved_backend())
+                            group.winner_rows, self._resolved_backend(),
+                            survivors=group.survivors)
 
     def _serial_iter(self, work_fn, spec: SweepSpec, cells, stop):
         """Lazily stream (index, cell) pairs in order."""
         with self._cache_mode():
-            for i, cell in cells:
+            for j, (i, cell) in enumerate(cells):
+                # one cell per planning call: pick the scalar-certify
+                # sample here (the call-local "sample" cadence would
+                # certify every single-group call)
                 planned = plan_design_cells(
                     work_fn, [cell], spec.n_chips, max_tp=spec.max_tp,
                     max_pp=spec.max_pp, execution=spec.execution,
-                    pricing_backend=self.pricing_backend)
+                    pricing_backend=self.pricing_backend,
+                    prune=self.prune,
+                    certify=j % CERTIFY_EVERY == 0)
                 pts = price_planned(planned, backend=self.pricing_backend)
                 item = SweepItem(i, cell, pts[0] if pts else None)
                 yield item
@@ -726,14 +808,16 @@ class DSEEngine:
 
     def _stream_group(self, grid, group: PlannedGroup) -> list[SweepItem]:
         # certify the worker's candidate argmin on a non-numpy parent
-        # backend, then price the group's winners (one batch per group —
-        # elementwise over the batch axis, so streamed values match a full
-        # sweep's bits)
+        # backend (over the pruned rows, remapped through the survivor
+        # map) and the sampled pruning certification, then price the
+        # group's winners (one batch per group — elementwise over the
+        # batch axis, so streamed values match a full sweep's bits)
         if len(group.matrix) and self._resolved_backend() != "numpy":
             priced = price_plans(group.matrix.cols,
                                  backend=self.pricing_backend)
             self._verify_group_winners(priced["iter_time"],
                                        priced["per_chip_mem_bytes"], group)
+        self._certify_group_prune(group)
         pairs = list(zip(group.indices, group.planned))
         live = [(i, p) for i, p in pairs if p is not None]
         pts = price_planned([p for _, p in live],

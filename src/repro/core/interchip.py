@@ -19,6 +19,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import math
+import os
 from typing import Sequence
 
 import numpy as np
@@ -28,7 +29,8 @@ from ..systems.system import SystemSpec
 from ..systems.topology import Topology, TopologyDim
 from .graph import DataflowGraph
 from .memo import GLOBAL_CACHE
-from .pricing import PlanMatrix, PlanVector, price_plans
+from .pricing import (PlanMatrix, PlanVector, price_plans,
+                      selection_columns)
 from .sharding import ShardingSolution, solve_sharding
 from .solver import enumerate_parallelism, minmax_partition
 from .utilization import kernel_utilizations
@@ -415,17 +417,169 @@ def _candidate_vector(work: TrainWorkload, plan: InterChipPlan) -> PlanVector:
         intra_comp=0.0, intra_mem=0.0, intra_net=0.0, intra_total=0.0)
 
 
+# --- candidate pruning -------------------------------------------------------
+#: Environment override consumed by ``default_prune()`` (and therefore by
+#: every ``prune="auto"`` default in this module, ``repro.core.dse`` and
+#: ``DSEEngine``).
+PRUNE_ENV_VAR = "DFMODEL_PRUNE"
+
+PRUNE_MODES = ("on", "off", "auto")
+
+
+def default_prune() -> str:
+    env = os.environ.get(PRUNE_ENV_VAR, "").strip().lower()
+    return env if env in ("on", "off") else "on"
+
+
+def resolve_prune(policy: str | bool) -> bool:
+    """Normalize a ``prune=`` policy to a bool (``"auto"`` → env → on)."""
+    if isinstance(policy, bool):
+        return policy
+    if policy not in PRUNE_MODES:
+        raise ValueError(f"unknown prune policy {policy!r}; "
+                         f"expected a bool or one of {PRUNE_MODES}")
+    if policy == "auto":
+        policy = default_prune()
+    return policy == "on"
+
+
+def dominance_keep(iter_time: np.ndarray, iter_lb: np.ndarray,
+                   mem: np.ndarray, chunk: int = 512) -> np.ndarray:
+    """Boolean keep-mask of the prefix-dominance filter.
+
+    Row ``s`` is pruned iff some EARLIER row ``r`` has
+    ``iter_time[r] <= iter_lb[s]`` and ``mem[r] <= mem[s]``. Such an
+    ``r`` is present in every pool ``s`` could appear in (its memory
+    footprint is no larger, so it is feasible whenever ``s`` is, and the
+    no-feasible fallback pool contains everything) and always beats ``s``
+    in the lexicographic argmin: its exact iteration time is no larger
+    than ``s``'s *lower bound*, and on exact ties ``np.argmin`` resolves
+    to the lower row — ``r``'s side. Pruned rows therefore can never be
+    selected for ANY capacity, which is the winner-preservation property
+    ``tests/test_interchip.py`` certifies against the scalar scan.
+
+    Checking all earlier rows (not just surviving ones) is sound: if the
+    dominating ``r`` was itself pruned by an even earlier ``r'``, then
+    ``iter_time[r'] <= iter_lb[r] <= iter_time[r] <= iter_lb[s]`` and the
+    memory chain ``mem[r'] <= mem[r] <= mem[s]`` make ``r'`` dominate
+    ``s`` too, down to a kept row by induction.
+
+    ``iter_lb`` on the dominated side (instead of the exact iter_time)
+    keeps the rule valid for any true lower bound — today the pipeline
+    term of ``pricing.selection_columns``, whose communication component
+    grows monotonically with TP (that monotonicity is what makes the
+    filter bite along the TP axis). The quadratic row-pair scan is
+    tiled ``chunk`` × ``chunk``: a block of candidate rows is compared
+    against earlier full blocks (all earlier by construction — no index
+    broadcast needed) and against its own strict lower triangle, so
+    peak temporary memory is O(chunk²) regardless of the enumeration
+    size.
+    """
+    n = len(iter_time)
+    keep = np.ones(n, dtype=bool)
+    if n <= 1:
+        return keep
+    for lo in range(0, n, chunk):
+        hi = min(lo + chunk, n)
+        blk_lb = iter_lb[lo:hi][:, None]
+        blk_mem = mem[lo:hi][:, None]
+        dominated = np.zeros(hi - lo, dtype=bool)
+        for plo in range(0, lo, chunk):
+            phi = min(plo + chunk, lo)
+            dom = ((iter_time[plo:phi][None, :] <= blk_lb)
+                   & (mem[plo:phi][None, :] <= blk_mem))
+            dominated |= dom.any(axis=1)
+        m = hi - lo
+        tri = np.arange(m)[None, :] < np.arange(m)[:, None]
+        dom = (tri & (iter_time[lo:hi][None, :] <= blk_lb)
+               & (mem[lo:hi][None, :] <= blk_mem))
+        dominated |= dom.any(axis=1)
+        keep[lo:hi] = ~dominated
+    return keep
+
+
+def capacity_keep(iter_time: np.ndarray, mem: np.ndarray,
+                  max_capacity: float) -> np.ndarray:
+    """Boolean keep-mask of the hard memory-feasibility filter.
+
+    Rows whose footprint exceeds every memory variant's capacity can
+    never be selected *feasibly*; the one exception is the no-feasible
+    fallback, where the serial scan returns the first row of globally
+    minimal iteration time — that row is always kept, so the fallback
+    winner survives bit-for-bit. (Topology-subdivision validity, the
+    other hard mask, is applied at enumeration time: invalid subdivisions
+    and undecomposable (tp, pp, dp) combos never enter the matrix.)
+    """
+    keep = mem <= max_capacity
+    if not keep.all() and len(iter_time):
+        keep[int(np.argmin(iter_time))] = True
+    return keep
+
+
+@dataclasses.dataclass
+class PrunedCandidates:
+    """A pruned view of one candidate matrix: the surviving rows, their
+    compacted :class:`~repro.core.pricing.PlanMatrix`, and the pruning
+    accounting. ``survivors`` maps pruned row ``i`` back to original
+    candidate row ``survivors[i]`` (ascending, so relative enumeration
+    order — and therefore argmin tie-breaking — is preserved)."""
+
+    survivors: np.ndarray              # int64 original rows, ascending
+    matrix: PlanMatrix                 # compacted candidate columns
+    stats: dict                        # enumerated / mem_pruned /
+                                       # dominance_pruned / survived
+    _priced: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    def __len__(self) -> int:
+        return int(self.survivors.shape[0])
+
+    def priced(self, backend: str = "numpy") -> dict[str, np.ndarray]:
+        """``price_plans`` over the surviving rows only (cached per
+        backend) — the compacted batch every backend, including the
+        pallas kernel path, prices instead of the full enumeration."""
+        out = self._priced.get(backend)
+        if out is None:
+            out = price_plans(self.matrix.cols, backend=backend)
+            self._priced[backend] = out
+        return out
+
+
+def prune_matrix(matrix: PlanMatrix, max_capacity: float,
+                 selection: dict[str, np.ndarray] | None = None
+                 ) -> PrunedCandidates:
+    """Apply the hard feasibility mask + the dominance filter to a
+    candidate matrix, columnar, before any full pricing runs."""
+    sel = selection if selection is not None else selection_columns(
+        matrix.cols)
+    n = len(matrix)
+    cap_keep = capacity_keep(sel["iter_time"], sel["per_chip_mem_bytes"],
+                             max_capacity)
+    dom_keep = dominance_keep(sel["iter_time"], sel["iter_lb"],
+                              sel["per_chip_mem_bytes"])
+    keep = cap_keep & dom_keep
+    survivors = np.flatnonzero(keep).astype(np.int64)
+    return PrunedCandidates(
+        survivors=survivors, matrix=matrix.take(survivors),
+        stats={"enumerated": int(n),
+               "mem_pruned": int((~cap_keep).sum()),
+               "dominance_pruned": int((cap_keep & ~dom_keep).sum()),
+               "survived": int(survivors.shape[0])})
+
+
 @dataclasses.dataclass
 class CandidateSet:
     """The columnar candidate space of one (workload, chip, n_chips,
     topology) search: the plan objects in canonical enumeration order plus
     their stacked :class:`~repro.core.pricing.PlanMatrix`. Priced columns
     are cached per backend so the memory variants of a system share one
-    batched pricing call."""
+    batched pricing call; pruned views are cached per capacity ceiling so
+    they share one mask computation too."""
 
     plans: list[InterChipPlan]
     matrix: PlanMatrix
     _priced: dict = dataclasses.field(default_factory=dict, repr=False)
+    _selection: dict | None = dataclasses.field(default=None, repr=False)
+    _pruned: dict = dataclasses.field(default_factory=dict, repr=False)
 
     def __len__(self) -> int:
         return len(self.plans)
@@ -438,25 +592,52 @@ class CandidateSet:
             self._priced[backend] = out
         return out
 
+    def selection(self) -> dict[str, np.ndarray]:
+        """The numpy selection prepass over the full matrix (cached):
+        exact ``iter_time``/``per_chip_mem_bytes`` plus dominance bounds,
+        without the full pricing formula."""
+        if self._selection is None:
+            self._selection = selection_columns(self.matrix.cols)
+        return self._selection
+
+    def pruned(self, max_capacity: float) -> PrunedCandidates:
+        """The pruned candidate view for a capacity ceiling (cached per
+        ceiling — the memory variants of one system share the pruning
+        pass through their common ``max(capacities)``)."""
+        out = self._pruned.get(max_capacity)
+        if out is None:
+            out = prune_matrix(self.matrix, max_capacity, self.selection())
+            self._pruned[max_capacity] = out
+        return out
+
 
 def candidate_matrix(work: TrainWorkload, system: SystemSpec,
                      max_tp: int | None = None,
                      max_pp: int | None = None,
                      allow_subdivision: bool = True,
                      fixed: tuple[int, int, int] | None = None,
-                     execution: str = "dataflow") -> CandidateSet:
+                     execution: str = "dataflow",
+                     prune: str | bool = "auto") -> CandidateSet:
     """Columnar :func:`candidate_plans`: the same enumeration, emitted as a
     :class:`CandidateSet` whose matrix rows are tagged with their
     (tp, pp, dp, dim-assignment) coordinates. Memoised (space ``candmat``)
     on the same structural key as the underlying plan solves, so a warm
-    re-sweep skips straight to the batched argmin."""
+    re-sweep skips straight to the batched argmin.
+
+    ``prune`` does not change the enumeration (pruning is a per-capacity
+    view, see :meth:`CandidateSet.pruned`); when it resolves on, the
+    selection prepass is computed eagerly so the memoised set carries its
+    warm dominance bounds into every re-sweep."""
     key = (_work_key(work), system.chip, system.n_chips,
            system.topology, max_tp, max_pp, allow_subdivision, fixed,
            execution)
-    return GLOBAL_CACHE.get_or_compute(
+    cands = GLOBAL_CACHE.get_or_compute(
         "candmat", key,
         lambda: _build_candidate_set(work, system, max_tp, max_pp,
                                      allow_subdivision, fixed, execution))
+    if resolve_prune(prune):
+        cands.selection()
+    return cands
 
 
 def _build_candidate_set(work, system, max_tp, max_pp, allow_subdivision,
@@ -493,19 +674,22 @@ def winner_rows(iter_time: np.ndarray, mem: np.ndarray,
 
 def select_plan(cands: "CandidateSet | Sequence[InterChipPlan]",
                 capacity: float,
-                backend: str = "numpy") -> InterChipPlan | None:
+                backend: str = "numpy",
+                prune: str | bool = "auto") -> InterChipPlan | None:
     """Pick the winner for one memory variant: the candidate minimizing
     (infeasible, iter_time) lexicographically — exactly the serial search's
     first-strictly-smaller acceptance order.
 
     Given a :class:`CandidateSet` this is a batched argmin over
     :func:`~repro.core.pricing.price_plans` output on ``backend`` (the
-    columnar hot path); given a plain plan sequence it is the scalar
-    reference scan over the plans' own priced fields, which the columnar
-    path is certified bit-identical to (``tests/test_interchip.py``).
+    columnar hot path, pruned per ``prune``); given a plain plan sequence
+    it is the scalar reference scan over the plans' own priced fields,
+    which the columnar path — pruned or not — is certified bit-identical
+    to (``tests/test_interchip.py``).
     """
     if isinstance(cands, CandidateSet):
-        return select_plans(cands, [capacity], backend=backend)[0]
+        return select_plans(cands, [capacity], backend=backend,
+                            prune=prune)[0]
     best: InterChipPlan | None = None
     bkey: tuple[bool, float] | None = None
     for plan in cands:
@@ -520,8 +704,9 @@ def select_plan(cands: "CandidateSet | Sequence[InterChipPlan]",
 def select_rows(cands: CandidateSet, capacities: Sequence[float],
                 backend: str = "numpy"
                 ) -> tuple[list[int], dict | None]:
-    """Winner candidate-row per capacity plus the priced columns used
-    (``None`` priced for an empty candidate set, rows all -1)."""
+    """UNPRUNED winner candidate-row per capacity plus the priced columns
+    used (``None`` priced for an empty candidate set, rows all -1) — the
+    full-enumeration reference the pruned path is certified against."""
     if not len(cands):
         return [-1] * len(capacities), None
     priced = cands.priced(backend)
@@ -529,13 +714,70 @@ def select_rows(cands: CandidateSet, capacities: Sequence[float],
                        capacities), priced
 
 
+@dataclasses.dataclass
+class SelectionResult:
+    """One batched selection over a candidate set, with the pruning
+    bookkeeping the engine ships across processes.
+
+    ``rows`` are winner indices in the ORIGINAL (unpruned) enumeration —
+    so certification against the full scalar scan compares like with
+    like; ``local_rows`` index the priced arrays, which cover only the
+    ``survivors`` rows when pruning ran (``survivors is None`` means the
+    full enumeration was priced)."""
+
+    rows: list[int]                    # original-row winner per capacity
+    local_rows: list[int]              # same winners, priced-array indexing
+    priced: dict | None                # priced columns over the priced rows
+    survivors: np.ndarray | None       # original indices of priced rows
+    stats: dict                        # enumerated / survived / priced
+
+
+def select_candidates(cands: CandidateSet, capacities: Sequence[float],
+                      backend: str = "numpy",
+                      prune: str | bool = "auto") -> SelectionResult:
+    """The per-memory-variant argmin for *every* capacity at once.
+
+    With pruning on (the default policy), the hard feasibility mask and
+    the dominance filter run first on the cheap selection prepass, and
+    only the surviving rows go through the full batched ``price_plans``
+    call on ``backend`` — strictly fewer rows priced, identical winners
+    (the pruning filters are winner-preserving by construction, and the
+    property is separately certified against the scalar scan)."""
+    n = len(cands)
+    empty_stats = {"enumerated": n, "survived": n, "priced": 0,
+                   "mem_pruned": 0, "dominance_pruned": 0}
+    if n == 0 or not len(capacities):
+        return SelectionResult([-1] * len(capacities),
+                               [-1] * len(capacities), None, None,
+                               empty_stats)
+    if not resolve_prune(prune):
+        priced = cands.priced(backend)
+        rows = winner_rows(priced["iter_time"],
+                           priced["per_chip_mem_bytes"], capacities)
+        return SelectionResult(rows, list(rows), priced, None,
+                               {**empty_stats, "priced": n})
+    pc = cands.pruned(max(capacities))
+    priced = pc.priced(backend)
+    local = winner_rows(priced["iter_time"], priced["per_chip_mem_bytes"],
+                        capacities)
+    rows = [int(pc.survivors[r]) if r >= 0 else -1 for r in local]
+    return SelectionResult(rows, local, priced, pc.survivors,
+                           {**pc.stats, "priced": len(pc)})
+
+
 def certify_winner_rows(iter_time: np.ndarray, mem: np.ndarray,
                         capacities: Sequence[float],
-                        expected: Sequence[int], backend: str) -> None:
+                        expected: Sequence[int], backend: str,
+                        survivors: np.ndarray | None = None) -> None:
     """The certify-or-die contract shared by the serial plan phase and
     ``DSEEngine``: a non-reference backend's batched argmin must
-    reproduce the numpy reference's winner rows exactly."""
+    reproduce the numpy reference's winner rows exactly. When the priced
+    arrays cover only pruned ``survivors``, the local argmin is remapped
+    through the survivor index map before comparing — ``expected`` is
+    always in original-enumeration indexing."""
     rows = winner_rows(iter_time, mem, capacities)
+    if survivors is not None:
+        rows = [int(survivors[r]) if r >= 0 else -1 for r in rows]
     if list(rows) != list(expected):
         raise RuntimeError(
             f"pricing backend {backend!r} selected different candidates "
@@ -543,19 +785,51 @@ def certify_winner_rows(iter_time: np.ndarray, mem: np.ndarray,
             f"the backend is not bit-identical")
 
 
+def scalar_winner_rows(iter_time: Sequence[float], mem: Sequence[float],
+                       capacities: Sequence[float]) -> list[int]:
+    """The literal serial reference scan, as a Python loop over scalar
+    rows: per capacity, the first row strictly improving the
+    (infeasible, iter_time) key. This is the ground truth the pruned
+    columnar selection is certified against (sampled in production,
+    exhaustively in tests)."""
+    out: list[int] = []
+    for cap in capacities:
+        bkey, bi = None, -1
+        for i, (it, m) in enumerate(zip(iter_time, mem)):
+            key = (m > cap, it)
+            if bkey is None or key < bkey:
+                bkey, bi = key, i
+        out.append(bi)
+    return out
+
+
+def certify_scalar_rows(iter_time: Sequence[float], mem: Sequence[float],
+                        capacities: Sequence[float],
+                        expected: Sequence[int], context: str) -> None:
+    """Certify-or-die for the pruning stage itself: the winners selected
+    over the pruned matrix must reproduce the full scalar scan exactly."""
+    rows = scalar_winner_rows(iter_time, mem, capacities)
+    if list(rows) != list(expected):
+        raise RuntimeError(
+            f"pruned candidate selection diverged from the full scalar "
+            f"scan ({context}): {list(expected)} != scalar {rows}; "
+            f"the pruning filters are not winner-preserving")
+
+
 def select_plans(cands: CandidateSet, capacities: Sequence[float],
-                 backend: str = "numpy") -> list[InterChipPlan | None]:
+                 backend: str = "numpy",
+                 prune: str | bool = "auto") -> list[InterChipPlan | None]:
     """The per-memory-variant argmin for *every* capacity at once: one
-    batched ``price_plans`` call over the candidate matrix, then a
-    vectorized lexicographic argmin per capacity — the memory variants of
-    a system never price a candidate twice."""
-    rows, priced = select_rows(cands, capacities, backend)
-    if priced is None:
+    batched ``price_plans`` call over the (pruned) candidate matrix, then
+    a vectorized lexicographic argmin per capacity — the memory variants
+    of a system never price a candidate twice."""
+    sel = select_candidates(cands, capacities, backend, prune)
+    if sel.priced is None:
         return [None] * len(capacities)
     return [dataclasses.replace(
                 cands.plans[r],
-                feasible=bool(priced["per_chip_mem_bytes"][r] <= cap))
-            for r, cap in zip(rows, capacities)]
+                feasible=bool(sel.priced["per_chip_mem_bytes"][lr] <= cap))
+            for r, lr, cap in zip(sel.rows, sel.local_rows, capacities)]
 
 
 def optimize_inter_chip(work: TrainWorkload, system: SystemSpec,
@@ -563,20 +837,32 @@ def optimize_inter_chip(work: TrainWorkload, system: SystemSpec,
                         max_pp: int | None = None,
                         allow_subdivision: bool = True,
                         fixed: tuple[int, int, int] | None = None,
-                        execution: str = "dataflow") -> InterChipPlan:
+                        execution: str = "dataflow",
+                        prune: str | bool = "off") -> InterChipPlan:
     """Search the (TP, PP, DP) × dim-assignment space; return the best
     *feasible* plan by iteration time (ties → first in enumeration order).
 
-    Composed of :func:`candidate_plans` (memory-independent plan phase) +
-    the scalar :func:`select_plan` scan — this is the serial *reference*
-    path; phased sweeps go through :func:`candidate_matrix` +
-    :func:`select_plans` (the batched columnar argmin) instead.
+    With ``prune="off"`` (the default) this composes
+    :func:`candidate_plans` (memory-independent plan phase) + the scalar
+    :func:`select_plan` scan — the serial *reference* path, deliberately
+    untouched by the pruning stage so certification against it stays
+    meaningful. Passing ``prune="on"``/``"auto"`` routes through the
+    pruned columnar selection instead (:func:`candidate_matrix` +
+    :func:`select_plan` on the pruned matrix), which is certified to
+    return the identical winner.
     """
-    best = select_plan(
-        candidate_plans(work, system, max_tp=max_tp, max_pp=max_pp,
-                        allow_subdivision=allow_subdivision, fixed=fixed,
-                        execution=execution),
-        system.memory.capacity)
+    if resolve_prune(prune):
+        best = select_plan(
+            candidate_matrix(work, system, max_tp=max_tp, max_pp=max_pp,
+                             allow_subdivision=allow_subdivision,
+                             fixed=fixed, execution=execution),
+            system.memory.capacity, prune=prune)
+    else:
+        best = select_plan(
+            candidate_plans(work, system, max_tp=max_tp, max_pp=max_pp,
+                            allow_subdivision=allow_subdivision, fixed=fixed,
+                            execution=execution),
+            system.memory.capacity)
     if best is None:
         raise ValueError(f"no (tp,pp,dp) decomposition of {system.n_chips} "
                          f"chips fits {work.name}")

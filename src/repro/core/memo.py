@@ -60,10 +60,21 @@ class CacheStats:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
 
+    def space_hit_rate(self, space: str) -> float:
+        """Hit rate of one key space, with the same zero-lookup guard as
+        the aggregate :attr:`hit_rate`: a space with no lookups (or one
+        this snapshot has never seen) reports 0.0, never a
+        ``ZeroDivisionError`` — spaces holding only entries inherited at
+        fork time, or registered after a ``clear()``, legitimately show
+        size > 0 with zero traffic."""
+        h, m, _ = self.by_space.get(space, (0, 0, 0))
+        total = h + m
+        return h / total if total else 0.0
+
     def rows(self) -> list[dict]:
         """Per-space stats as table/JSON rows (bench_dse reporting)."""
         out = [{"space": s, "hits": h, "misses": m, "entries": e,
-                "hit_rate": h / (h + m) if (h + m) else 0.0}
+                "hit_rate": self.space_hit_rate(s)}
                for s, (h, m, e) in sorted(self.by_space.items())]
         out.append({"space": "TOTAL", "hits": self.hits,
                     "misses": self.misses, "entries": self.entries,

@@ -160,6 +160,18 @@ class PlanMatrix:
              for name in FIELDS},
             np.concatenate([m.tags for m in matrices], axis=0))
 
+    def take(self, rows: Sequence[int] | np.ndarray) -> "PlanMatrix":
+        """Row-subset view (the pruning compaction: survivors only).
+
+        ``rows`` are row indices into this matrix; the result's row ``i``
+        is this matrix's row ``rows[i]``, tags included, so a pruned
+        matrix stays a valid :class:`PlanMatrix` for every consumer
+        (``price_plans``, the pallas kernel path, IPC shipping).
+        """
+        idx = np.asarray(rows, dtype=np.int64)
+        return PlanMatrix({name: col[idx] for name, col in self.cols.items()},
+                          self.tags[idx])
+
 
 def random_plan_vectors(n: int, seed: int = 0) -> list[PlanVector]:
     """Seeded random-but-plausible plan vectors, with every degenerate
@@ -281,6 +293,64 @@ def _price(xp, v: Mapping[str, object]) -> dict[str, object]:
         "per_chip_mem_bytes": mem,
         "feasible": feasible,
     }
+
+
+# --- the selection prepass (candidate pruning inputs) ------------------------
+def _selection(xp, v: Mapping[str, object]) -> dict[str, object]:
+    """The two columns the candidate argmin consumes — ``iter_time`` and
+    ``per_chip_mem_bytes`` — plus the lower bounds the dominance filter
+    uses, at a fraction of :func:`_price`'s work (no utilization, derate,
+    breakdown or efficiency terms).
+
+    The ``iter_time``/``per_chip_mem_bytes`` expressions are copied from
+    :func:`_price` operation for operation, so prepass values are
+    BIT-IDENTICAL to the priced columns — that is what lets the pruning
+    stage reason about rows it will never fully price.
+
+    ``iter_lb`` is the full pipeline term ``t_pipe`` (compute, network
+    and p2p composed exactly as priced), dropping only the non-negative
+    exposed-DP term: ``iter_lb ≤ iter_time`` always, with equality
+    whenever the DP all-reduce hides. Because ``t_pipe`` is bounded
+    below by its communication component
+    ``(n_micro + pp - 1) · (t_net_fwd + t_net_bwd)`` — TP collective
+    seconds, which grow monotonically with the TP degree (same payload,
+    more chips in the group, fewer FLOPs to hide it) — the bound rises
+    along the TP axis of the candidate enumeration, which is what lets
+    the dominance filter sink whole swaths of high-TP candidates once
+    any cheaper candidate is known.
+    """
+    t_fwd = xp.maximum(xp.maximum(v["t_comp_stage"], v["t_net_stage"]),
+                       v["t_p2p"])
+    t_bwd_comp = v["t_comp_stage"] * v["bwd_flop_mult"]
+    t_bwd_net = v["t_net_stage"] * (v["bwd_flop_mult"] * v["bwd_comm_mult"])
+    t_bwd = xp.maximum(xp.maximum(t_bwd_comp, t_bwd_net), v["t_p2p"])
+    t_pipe = (v["n_micro"] + v["pp"] - 1.0) * (t_fwd + t_bwd)
+    exposed_dp = xp.maximum(0.0, v["t_dp"] - v["n_micro"] * t_bwd_comp * 0.5)
+    iter_time = t_pipe + exposed_dp
+
+    w_bytes = v["weight_bytes"] / (v["tp"] * v["pp"])
+    opt_bytes = w_bytes * v["opt_mult"]
+    act_per_layer = v["act_bytes_layer"] / v["tp"]
+    act_bytes = (act_per_layer * v["layers_per_stage"]
+                 * xp.minimum(v["n_micro"], v["pp"]))
+    mem = w_bytes + opt_bytes + act_bytes
+    return {
+        "iter_time": iter_time,
+        "per_chip_mem_bytes": mem,
+        "iter_lb": t_pipe,
+    }
+
+
+def selection_columns(cols: Mapping[str, np.ndarray]) -> dict[str, np.ndarray]:
+    """Numpy selection prepass over stacked candidate columns.
+
+    Always runs on the numpy reference: pruning is part of the *reference
+    semantics* (which rows exist to be priced), so its decision procedure
+    never floats with the pricing backend. Returns ``iter_time`` and
+    ``per_chip_mem_bytes`` bit-identical to :func:`price_plans` output,
+    plus the ``iter_lb`` dominance bound.
+    """
+    return {k: np.asarray(a) for k, a in _selection(np, cols).items()}
 
 
 def _dispatch(formula, cols: Mapping[str, np.ndarray], backend: str,

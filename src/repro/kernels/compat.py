@@ -1,0 +1,35 @@
+"""Version-compatibility shims for the jax/pallas surface the kernels use.
+
+The TPU pallas compiler-params dataclass was renamed across jax releases:
+older releases (including the 0.4.x line this repo pins) expose
+``pltpu.TPUCompilerParams``, newer ones renamed it to
+``pltpu.CompilerParams`` (and deprecate the old name). Every kernel in
+this package builds its ``compiler_params=`` through
+:func:`tpu_compiler_params` so the same source runs on both sides of the
+rename instead of dying with an import-time ``AttributeError``.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+#: The concrete params class of the installed jax: the new name wins when
+#: both exist (on such versions the old name is a deprecation alias).
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams(**kwargs)`` on jax versions that have it,
+    ``pltpu.TPUCompilerParams(**kwargs)`` otherwise. Keyword-only, so the
+    call sites read identically to the modern API."""
+    return _COMPILER_PARAMS_CLS(**kwargs)
+
+
+#: The TPU memory-space enum went through the same rename
+#: (``TPUMemorySpace`` → ``MemorySpace``); kernels import the members they
+#: use from here instead of guessing the enum's current name.
+_MEMORY_SPACE = getattr(pltpu, "MemorySpace", None) or getattr(
+    pltpu, "TPUMemorySpace")
+
+SMEM = _MEMORY_SPACE.SMEM
+ANY = _MEMORY_SPACE.ANY

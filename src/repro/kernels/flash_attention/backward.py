@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..compat import tpu_compiler_params
+
 NEG_INF = -1e30
 
 
@@ -117,7 +119,7 @@ def flash_attention_fwd_lse(q, k, v, causal=True, block_q=128, block_k=128,
         scratch_shapes=[pltpu.VMEM((block_q, hd), jnp.float32),
                         pltpu.VMEM((block_q,), jnp.float32),
                         pltpu.VMEM((block_q,), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qr, kr, vr)
@@ -269,7 +271,7 @@ def flash_attention_bwd(q, k, v, o, lse, do, causal=True,
                    jax.ShapeDtypeStruct((b * h, sk, hd), jnp.float32)],
         scratch_shapes=[pltpu.VMEM((block_k, hd), jnp.float32),
                         pltpu.VMEM((block_k, hd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qr, kr, vr, dor, lser, ddr)
@@ -296,7 +298,7 @@ def flash_attention_bwd(q, k, v, o, lse, do, causal=True,
                                lambda ih, iq, ik: (ih, iq, 0)),
         out_shape=jax.ShapeDtypeStruct((b * h, sq, hd), q.dtype),
         scratch_shapes=[pltpu.VMEM((block_q, hd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qr, kr, vr, dor, lser, ddr)

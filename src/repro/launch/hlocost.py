@@ -220,7 +220,11 @@ def parse_hlo(text: str) -> tuple[dict, str]:
 
 # ------------------------------ cost model -----------------------------------
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
-_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+# fusions annotate their body as ``calls=%comp``; plain call instructions
+# use ``to_apply=%comp`` on some XLA versions (e.g. the CPU backend's
+# parallel-task wrapper in the jax 0.4.x line) and ``calls=`` on others —
+# resolve both, or every call body prices as zero
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
 _BODY_RE = re.compile(r"body=%?([\w.\-]+)")
 _COND_RE = re.compile(r"condition=%?([\w.\-]+)")
 _BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")

@@ -282,8 +282,11 @@ def decode_self_attention(p: dict, x: jax.Array, cache_k: jax.Array,
     mask = jnp.arange(smax)[None, None, None, :] <= pos
     logits = jnp.where(mask, logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1)
-    o = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(vv.dtype), vv)
-    o = o.reshape(b, 1, cfg.n_heads * hd)
+    # keep the PV contraction in f32: downcasting probs to the cache dtype
+    # costs ~3 decimal digits for nothing and makes greedy decode disagree
+    # with the context-parallel path (which reduces in f32) on near-ties
+    o = jnp.einsum("bhqk,bkhd->bqhd", probs, vv.astype(jnp.float32))
+    o = o.astype(x.dtype).reshape(b, 1, cfg.n_heads * hd)
     return o @ p["wo"].astype(x.dtype), cache_k, cache_v
 
 

@@ -7,9 +7,10 @@ install — the seeded random checks below mirror the property tests in
 test_solver.py for the vectorized minmax ``extra`` path.
 
 The CI matrix re-runs this file with ``DFMODEL_TEST_MP_CONTEXT``
-(fork | spawn | forkserver) and ``DFMODEL_TEST_SHARED_CACHE`` (1 | 0):
-engines built through :func:`_engine` pick those up, so every pool
-transport is exercised with the shared store both on and off.
+(fork | spawn | forkserver), ``DFMODEL_TEST_SHARED_CACHE`` (1 | 0) and
+``DFMODEL_TEST_PRUNE`` (1 | 0): engines built through :func:`_engine`
+pick those up, so every pool transport is exercised with the shared
+store and the candidate-pruning stage both on and off.
 """
 from __future__ import annotations
 
@@ -43,6 +44,10 @@ def _engine(**kwargs) -> DSEEngine:
     if env_shared is not None:
         kwargs.setdefault("shared_cache",
                           env_shared not in ("0", "", "off"))
+    env_prune = os.environ.get("DFMODEL_TEST_PRUNE")
+    if env_prune is not None:
+        kwargs.setdefault("prune",
+                          "off" if env_prune in ("0", "", "off") else "on")
     return DSEEngine(**kwargs)
 
 
@@ -549,3 +554,122 @@ def test_smoke_scenarios_sweep_and_have_nonempty_frontier(name):
     assert all(any(f is p for p in res.points) for f in res.frontier)
     # frontier rows carry the workload tag for the bench tables
     assert res.rows()[0]["workload"] == name
+
+
+# --------------------------- candidate pruning -------------------------------
+def test_prune_on_off_engines_identical_across_all_scenarios():
+    """The pruning acceptance property at engine level: for EVERY
+    scenario family, a prune-on sweep returns DesignPoint rows identical
+    to a prune-off sweep, while pricing strictly fewer candidate rows in
+    aggregate (last_plan_stats accounting)."""
+    enumerated = survived = 0
+    for name in scenario_names():
+        clear_caches()
+        on = DSEEngine(parallel=False, prune="on")
+        res_on = on.sweep_scenario(name, smoke=True)
+        stats = on.last_plan_stats
+        assert stats is not None and stats["prune"] is True
+        assert stats["priced"] == stats["survived"] <= stats["enumerated"]
+        enumerated += stats["enumerated"]
+        survived += stats["survived"]
+        clear_caches()
+        off = DSEEngine(parallel=False, prune="off")
+        res_off = off.sweep_scenario(name, smoke=True)
+        assert off.last_plan_stats["prune"] is False
+        assert ([p.row() for p in res_on.points]
+                == [p.row() for p in res_off.points]), name
+    assert survived < enumerated, "pruning never dropped a row anywhere"
+
+
+def test_survivor_index_map_shipping_spawn_exactly_once():
+    """Spawn workers with a non-numpy parent ship PRUNED matrices plus
+    survivor index maps, exactly one group per system; the parent's
+    batched re-pricing covers only surviving rows, every shipped winner
+    is a survivor, and the CERTIFY_EVERY-sampled groups additionally
+    carry the unpruned matrix for the parent's scalar-scan check."""
+    import multiprocessing
+
+    pytest.importorskip("jax")
+    if "spawn" not in multiprocessing.get_all_start_methods():
+        pytest.skip("spawn not available on this platform")
+    from repro.core.dse import CERTIFY_EVERY
+
+    clear_caches()
+    with caching_disabled():
+        ref = _scalar_reference(SMOKE_SPEC)
+    clear_caches()
+    engine = DSEEngine(parallel=True, max_workers=2, mp_context="spawn",
+                       pricing_backend="jax", prune="on")
+    captured: dict = {}
+    orig = engine._finish_plan_groups
+
+    def spy(groups, n_cells):
+        captured["groups"] = groups
+        return orig(groups, n_cells)
+
+    engine._finish_plan_groups = spy
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # a serial fallback would hide bugs
+        pts = engine.sweep(_tiny_work, SMOKE_SPEC)
+    assert [p.row() for p in pts] == [p.row() for p in ref]
+    groups = captured["groups"]
+    grid = SMOKE_SPEC.grid()
+    assert sorted(i for g in groups for i in g.indices) == \
+        list(range(len(grid)))                      # every cell exactly once
+    full_shipped = 0
+    for g in groups:
+        assert g.survivors is not None, "pruned group shipped no index map"
+        assert len(g.survivors) == len(g.matrix) == g.prune_stats["survived"]
+        assert list(g.survivors) == sorted(set(g.survivors))  # unique, sorted
+        assert all(0 <= s < g.n_candidates for s in g.survivors)
+        assert all(r in g.survivors for r in g.winner_rows if r >= 0)
+        if g.full_matrix is not None:
+            full_shipped += 1
+            assert len(g.full_matrix) == g.n_candidates
+    n_tasks = len({(c, n, t) for c, _m, n, t in grid})
+    want_sampled = len([i for i in range(n_tasks) if i % CERTIFY_EVERY == 0])
+    assert full_shipped == want_sampled
+    stats = engine.last_plan_stats
+    assert stats["survived"] < stats["enumerated"]
+    assert stats["priced"] == stats["survived"]
+    assert stats["scalar_certified_groups"] == want_sampled
+    assert stats["parent_certified_groups"] == want_sampled
+    assert stats["verified"] is True and stats["prune"] is True
+
+
+def test_parent_scalar_certification_detects_dropped_winner():
+    """If pruning (or IPC) ever mangled a shipped winner, the parent's
+    sampled full-matrix re-pricing must fail loudly."""
+    from repro.core.dse import plan_design_groups
+
+    clear_caches()
+    grid = SMOKE_SPEC.grid()
+    groups = plan_design_groups(_tiny_work, grid, SMOKE_SPEC.n_chips,
+                                max_tp=SMOKE_SPEC.max_tp, prune="on",
+                                certify=True)
+    assert any(g.full_matrix is not None for g in groups)
+    tampered = [dataclasses.replace(
+        g, winner_rows=tuple(r + 1 if r >= 0 else r for r in g.winner_rows))
+        if g.full_matrix is not None else g for g in groups]
+    engine = DSEEngine(parallel=False, prune="on")
+    with pytest.raises(RuntimeError, match="not winner-preserving"):
+        engine._finish_plan_groups(tampered, len(grid))
+    # untampered groups certify clean
+    engine._finish_plan_groups(groups, len(grid))
+    assert engine.last_plan_stats["scalar_certified_groups"] > 0
+
+
+def test_prune_off_engine_ships_full_matrices():
+    """prune='off' keeps the PR 3 contract: full matrices, no survivor
+    maps, no sampled certification shipping."""
+    from repro.core.dse import plan_design_groups
+
+    clear_caches()
+    grid = SMOKE_SPEC.grid()
+    groups = plan_design_groups(_tiny_work, grid, SMOKE_SPEC.n_chips,
+                                max_tp=SMOKE_SPEC.max_tp, prune="off")
+    for g in groups:
+        assert g.survivors is None
+        assert g.full_matrix is None
+        assert len(g.matrix) == g.n_candidates
+        assert g.prune_stats["survived"] == g.prune_stats["enumerated"]

@@ -250,3 +250,196 @@ def test_nvlink_never_slower_than_pcie():
     pf = optimize_inter_chip(work, fast)
     ps = optimize_inter_chip(work, slow)
     assert pf.iter_time <= ps.iter_time * (1 + 1e-9)
+
+
+# --------------------------- candidate pruning -------------------------------
+def test_pruned_select_matches_unpruned_seeded():
+    """The pruning acceptance property: across seeded random workloads,
+    systems and capacity regimes (all-feasible, none-feasible ties,
+    boundary capacities), select_plans with the pruning stage picks
+    plans identical to the unpruned columnar path and the scalar scan —
+    while pricing strictly fewer candidate rows overall."""
+    from repro.core.interchip import select_candidates
+
+    rng = np.random.default_rng(1234)
+    enumerated = survived = 0
+    for _ in range(8):
+        clear_caches()
+        work = _random_workload(rng)
+        n = int(rng.choice([8, 16]))
+        topo = ring(n, ICI) if rng.integers(2) else torus2d(n, ICI)
+        chip = TPU_V4 if rng.integers(2) else H100
+        sys_ = SystemSpec("sys", chip, HBM, topo)
+        plans = candidate_plans(work, sys_, max_tp=16)
+        cands = candidate_matrix(work, sys_, max_tp=16)
+        mems = sorted({p.per_chip_mem_bytes for p in plans})
+        caps = [0.0, math.inf, mems[0], mems[len(mems) // 2],
+                float(rng.uniform(mems[0], mems[-1])), HBM.capacity]
+        sel = select_candidates(cands, caps, prune="on")
+        ref = select_candidates(cands, caps, prune="off")
+        assert sel.rows == ref.rows
+        for cap, row in zip(caps, sel.rows):
+            assert row == _scalar_winner(plans, cap)[0]
+        on = select_plans(cands, caps, prune="on")
+        off = select_plans(cands, caps, prune="off")
+        for a, b in zip(on, off):
+            assert (a.tp, a.pp, a.dp, a.feasible) == \
+                (b.tp, b.pp, b.dp, b.feasible)
+            assert a.iter_time == b.iter_time
+            assert a.per_chip_mem_bytes == b.per_chip_mem_bytes
+        assert sel.stats["survived"] <= sel.stats["enumerated"]
+        assert (sel.stats["mem_pruned"] + sel.stats["dominance_pruned"]
+                + sel.stats["survived"]
+                >= sel.stats["enumerated"])  # masks may overlap
+        enumerated += sel.stats["enumerated"]
+        survived += sel.stats["survived"]
+    assert survived < enumerated, "pruning never dropped a single row"
+
+
+def test_pruned_infeasible_tie_ordering_prefers_first_candidate():
+    """Capacity 0 makes every candidate infeasible: the pruned path must
+    reproduce the fallback winner — the FIRST row of globally minimal
+    iter_time — while pricing only the (tiny) surviving set."""
+    from repro.core.interchip import select_candidates
+
+    clear_caches()
+    work = gpt_workload(SMALL, global_batch=64, microbatch=1)
+    sys_ = _system(16)
+    plans = candidate_plans(work, sys_, max_tp=16)
+    cands = candidate_matrix(work, sys_, max_tp=16)
+    it = np.array([p.iter_time for p in plans])
+    assert len(it) > len(np.unique(it)), "grid should produce exact ties"
+    sel = select_candidates(cands, [0.0], prune="on")
+    first_min = int(np.flatnonzero(it == it.min())[0])
+    assert sel.rows == [first_min] == [_scalar_winner(plans, 0.0)[0]]
+    assert sel.stats["survived"] < sel.stats["enumerated"]
+    assert not select_plan(cands, 0.0, prune="on").feasible
+
+
+def test_prune_matrix_bounds_and_survivor_map():
+    """Structural contracts of the pruned view: iter_lb a true lower
+    bound on iter_time, survivors ascending and consistent with the
+    compacted matrix, stats that add up."""
+    from repro.core.interchip import prune_matrix
+    from repro.core.pricing import selection_columns
+
+    clear_caches()
+    work = gpt_workload(SMALL, global_batch=64, microbatch=1)
+    cands = candidate_matrix(work, _system(16), max_tp=16)
+    sel = selection_columns(cands.matrix.cols)
+    assert (sel["iter_lb"] <= sel["iter_time"]).all()
+    priced = cands.priced("numpy")
+    assert (sel["iter_time"].view(np.uint64)
+            == priced["iter_time"].view(np.uint64)).all()
+    assert (sel["per_chip_mem_bytes"].view(np.uint64)
+            == priced["per_chip_mem_bytes"].view(np.uint64)).all()
+    pc = cands.pruned(HBM.capacity)
+    assert (np.diff(pc.survivors) > 0).all()
+    assert len(pc.matrix) == len(pc.survivors) == pc.stats["survived"]
+    for local, orig in enumerate(pc.survivors.tolist()):
+        assert (pc.matrix.tags[local] == cands.matrix.tags[orig]).all()
+    got = pc.priced("numpy")["iter_time"]
+    assert (got.view(np.uint64)
+            == priced["iter_time"][pc.survivors].view(np.uint64)).all()
+
+
+def test_prune_policy_resolution_and_env(monkeypatch):
+    from repro.core.interchip import PRUNE_ENV_VAR, default_prune, resolve_prune
+
+    assert resolve_prune(True) and not resolve_prune(False)
+    assert resolve_prune("on") and not resolve_prune("off")
+    monkeypatch.delenv(PRUNE_ENV_VAR, raising=False)
+    assert default_prune() == "on" and resolve_prune("auto")
+    monkeypatch.setenv(PRUNE_ENV_VAR, "off")
+    assert default_prune() == "off" and not resolve_prune("auto")
+    monkeypatch.setenv(PRUNE_ENV_VAR, "gibberish")
+    assert default_prune() == "on"
+    with pytest.raises(ValueError):
+        resolve_prune("sometimes")
+
+
+def test_optimize_inter_chip_pruned_matches_reference():
+    clear_caches()
+    work = gpt_workload(SMALL, global_batch=64, microbatch=1)
+    sys_ = _system(16)
+    ref = optimize_inter_chip(work, sys_)               # prune="off" default
+    got = optimize_inter_chip(work, sys_, prune="on")
+    assert (got.tp, got.pp, got.dp, got.feasible) == \
+        (ref.tp, ref.pp, ref.dp, ref.feasible)
+    assert got.iter_time == ref.iter_time
+
+
+def _synthetic_matrix(vectors):
+    from repro.core.pricing import PlanMatrix
+
+    return PlanMatrix.from_vectors(vectors,
+                                   [(1, 1, 1, i) for i in range(len(vectors))])
+
+
+def test_prune_matrix_synthetic_with_duplicates_and_ties_seeded():
+    """Synthetic candidate batches with injected duplicate rows (exact
+    iter_time AND mem ties): the pruned argmin must still resolve to the
+    first-index winner of the scalar scan for every capacity."""
+    from repro.core.interchip import prune_matrix, winner_rows as wr
+    from repro.core.pricing import price_plans, random_plan_vectors
+
+    rng = np.random.default_rng(77)
+    for trial in range(20):
+        base = random_plan_vectors(int(rng.integers(2, 40)),
+                                   seed=int(rng.integers(0, 10_000)))
+        # duplicate a random prefix to force exact ties at distinct rows
+        vectors = base + base[:int(rng.integers(1, len(base) + 1))]
+        m = _synthetic_matrix(vectors)
+        priced = price_plans(m.cols, backend="numpy")
+        it, mem = priced["iter_time"], priced["per_chip_mem_bytes"]
+        caps = [0.0, float(np.inf), float(np.median(mem)),
+                float(mem.min()), float(mem.max()),
+                float(rng.uniform(mem.min(), mem.max()))]
+        want = wr(it, mem, caps)
+        pc = prune_matrix(m, max(caps))
+        pp = price_plans(pc.matrix.cols, backend="numpy")
+        local = wr(pp["iter_time"], pp["per_chip_mem_bytes"], caps)
+        got = [int(pc.survivors[r]) for r in local]
+        assert got == want, f"trial {trial}: {got} != {want}"
+
+
+# ------------------------ hypothesis variant (dev extra) ---------------------
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=120, deadline=None)
+    @given(seed=st.integers(0, 2**20), n=st.integers(1, 60),
+           dup=st.integers(0, 60),
+           cap_kind=st.sampled_from(["zero", "inf", "min", "max", "mid"]),
+           extra_cap=st.floats(0.0, 1e13, allow_nan=False))
+    def test_pruned_winner_identity_hypothesis(seed, n, dup, cap_kind,
+                                               extra_cap):
+        """Property form of the pruning acceptance criterion: for ANY
+        candidate batch (random plan vectors, duplicates forcing exact
+        iter/mem ties at distinct rows) and ANY capacity — including the
+        all-infeasible fallback regime — pruned and unpruned selection
+        return the same original-row winner."""
+        from repro.core.interchip import prune_matrix, winner_rows as wr
+        from repro.core.pricing import price_plans, random_plan_vectors
+
+        base = random_plan_vectors(n, seed=seed)
+        vectors = base + base[:min(dup, n)]
+        m = _synthetic_matrix(vectors)
+        priced = price_plans(m.cols, backend="numpy")
+        it, mem = priced["iter_time"], priced["per_chip_mem_bytes"]
+        cap = {"zero": 0.0, "inf": float(np.inf), "min": float(mem.min()),
+               "max": float(mem.max()),
+               "mid": float(np.median(mem))}[cap_kind]
+        caps = [cap, extra_cap]
+        want = wr(it, mem, caps)
+        pc = prune_matrix(m, max(caps))
+        pp = price_plans(pc.matrix.cols, backend="numpy")
+        local = wr(pp["iter_time"], pp["per_chip_mem_bytes"], caps)
+        assert [int(pc.survivors[r]) for r in local] == want

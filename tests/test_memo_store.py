@@ -333,3 +333,36 @@ def test_detach_returns_client_and_keeps_local_entries():
         assert cache.get_or_compute("s", "k", lambda: 43) == 42  # local warm
     finally:
         store.close()
+
+
+# ---- CacheStats per-space accounting ----------------------------------------
+def test_cache_stats_space_hit_rate_guards_zero_lookups():
+    """Per-space hit rates carry the same divide-by-zero guard as the
+    aggregate: a space with zero lookups — entries only, e.g. inherited
+    at fork time — and an unknown space both report 0.0 instead of
+    raising, and ``rows()`` stays consistent with ``space_hit_rate``."""
+    cache = SolveCache()
+    cache.get_or_compute("hot", "k", lambda: 1)
+    cache.get_or_compute("hot", "k", lambda: 2)      # 1 hit, 1 miss
+    cache.get_or_compute("coldmiss", "k", lambda: 3)  # 0 hits, 1 miss
+    # a space with entries but no recorded lookups: seed the data dict the
+    # way a fork-inherited cache would look after the child's stats reset
+    cache._data[("inherited", "k")] = 9
+    stats = cache.stats()
+    assert stats.space_hit_rate("hot") == 0.5
+    assert stats.space_hit_rate("coldmiss") == 0.0
+    assert stats.space_hit_rate("inherited") == 0.0   # zero lookups, no raise
+    assert stats.space_hit_rate("never-seen") == 0.0  # unknown space, no raise
+    assert stats.by_space["inherited"] == (0, 0, 1)
+    by_row = {r["space"]: r for r in stats.rows()}
+    for space in ("hot", "coldmiss", "inherited"):
+        assert by_row[space]["hit_rate"] == stats.space_hit_rate(space)
+    assert by_row["TOTAL"]["hit_rate"] == stats.hit_rate
+
+
+def test_cache_stats_empty_cache_rates_all_zero():
+    stats = SolveCache().stats()
+    assert stats.hit_rate == 0.0
+    assert stats.space_hit_rate("anything") == 0.0
+    assert stats.rows()[-1] == {"space": "TOTAL", "hits": 0, "misses": 0,
+                                "entries": 0, "hit_rate": 0.0}

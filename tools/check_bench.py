@@ -22,7 +22,15 @@ Runs the smoke `speedup_report` (the same measurement `benchmarks.run
   ≥ $DFMODEL_BENCH_SHARED_MIN_HITS (default 1: workers provably reused
   each other's solves), with the shared hit-rate above the absolute
   floor $DFMODEL_BENCH_SHARED_MIN_RATE (default 0.002 — the rate is
-  pool-scheduling-dependent, so the floor is deliberately loose).
+  pool-scheduling-dependent, so the floor is deliberately loose);
+* **candidate pruning** — the report's `prune` block must show the
+  pruning stage enabled with `winners_identical` true (the prune-on
+  engine's DesignPoint rows reproduce the prune-off engine's
+  bit-for-bit), strictly fewer candidate rows priced than enumerated,
+  and the prune-on engine's points/sec no lower than the prune-off
+  engine's divided by $DFMODEL_BENCH_PRUNE_SLACK (default 1.5 — the
+  smoke grid is tiny, so per-run scheduler noise dominates; the gate
+  certifies "pruning does not slow the sweep down", not a speedup).
 
 Exit 1 on any regression. `--update` rewrites the committed baseline with
 the fresh numbers instead (run it on the machine that owns the baseline
@@ -76,7 +84,8 @@ def _shared_hit_rate(report: dict) -> float:
 def compare(fresh: dict, base: dict,
             slowdown: float, min_speedup: float,
             hit_drop: float, shared_min_hits: int = 1,
-            shared_min_rate: float = 0.002) -> list[str]:
+            shared_min_rate: float = 0.002,
+            prune_slack: float = 1.5) -> list[str]:
     """Return a list of human-readable regression messages (empty = pass)."""
     problems: list[str] = []
     if not fresh.get("rows_identical", False):
@@ -125,6 +134,31 @@ def compare(fresh: dict, base: dict,
         problems.append(
             f"shared-store hit-rate {fresh_shr:.4f} < floor "
             f"{shared_min_rate:g} (baseline {_shared_hit_rate(base):.4f})")
+    # the candidate-pruning row: the pruned argmin must select identical
+    # winners while pricing STRICTLY fewer candidate rows, at no
+    # throughput loss beyond scheduler noise
+    prune = fresh.get("prune")
+    if not prune:
+        problems.append("prune block missing: the candidate-pruning sweep "
+                        "did not run")
+    else:
+        if not prune.get("enabled", False):
+            problems.append("prune.enabled is False: the pruning stage was "
+                            "bypassed")
+        if not prune.get("winners_identical", False):
+            problems.append("prune.winners_identical is False: the pruned "
+                            "argmin no longer reproduces the unpruned rows")
+        enum_, priced = prune.get("enumerated", 0), prune.get("priced", 0)
+        if not (0 < priced < enum_):
+            problems.append(
+                f"pruning priced {priced} of {enum_} enumerated candidate "
+                f"rows; the gate requires 0 < priced < enumerated")
+        on = prune.get("points_per_s_on", 0.0)
+        off = prune.get("points_per_s_off", 0.0)
+        if on < off / prune_slack:
+            problems.append(
+                f"prune-on throughput {on:.1f} points/s < prune-off "
+                f"{off:.1f} / slack {prune_slack:g}")
     return problems
 
 
@@ -147,6 +181,7 @@ def main() -> int:
                                          "1"))
     shared_min_rate = float(os.environ.get("DFMODEL_BENCH_SHARED_MIN_RATE",
                                            "0.002"))
+    prune_slack = float(os.environ.get("DFMODEL_BENCH_PRUNE_SLACK", "1.5"))
 
     fresh = _fresh_report(args.fresh_out)
     if args.update:
@@ -162,7 +197,8 @@ def main() -> int:
     base = json.loads(args.baseline.read_text())
     problems = compare(fresh, base, slowdown, min_speedup, hit_drop,
                        shared_min_hits=shared_min_hits,
-                       shared_min_rate=shared_min_rate)
+                       shared_min_rate=shared_min_rate,
+                       prune_slack=prune_slack)
     for path, vals in fresh.get("paths", {}).items():
         print(f"  {path:20s} {vals['points_per_s']:10.1f} points/s "
               f"(baseline "
@@ -172,6 +208,11 @@ def main() -> int:
           f"{shared.get('hits', 0)} cross-worker hits, "
           f"{shared.get('entries', 0)} entries, hit rate "
           f"{_shared_hit_rate(fresh):.3f}")
+    prune = fresh.get("prune") or {}
+    print(f"  prune: {prune.get('enumerated', 0)} enumerated -> "
+          f"{prune.get('priced', 0)} priced "
+          f"({prune.get('shrink', 1.0):.2f}x rows), winners identical: "
+          f"{prune.get('winners_identical', False)}")
     if problems:
         print("bench gate: REGRESSION", file=sys.stderr)
         for p in problems:

@@ -38,10 +38,14 @@ def main() -> None:
     ref = sweep(sc.work_fn, n_chips=s.n_chips, chips=s.chips,
                 topologies=s.topologies, mem_net=s.mem_net, max_tp=s.max_tp,
                 phased=False)
-    pts = DSEEngine(parallel=False).sweep(sc.work_fn, s)  # backend from env
+    engine = DSEEngine(parallel=False)  # backend from env, pruning default-on
+    pts = engine.sweep(sc.work_fn, s)
     assert [p.row() for p in pts] == [p.row() for p in ref], \
         f"pricing backend {backend} diverged from the scalar reference"
-    print(f"pricing backend {backend}: {len(pts)} points, rows identical OK")
+    st = engine.last_plan_stats or {}
+    print(f"pricing backend {backend}: {len(pts)} points, rows identical OK "
+          f"(pruned {st.get('enumerated', 0)} -> {st.get('priced', 0)} "
+          f"candidate rows)")
 
 
 if __name__ == "__main__":

@@ -31,23 +31,38 @@ fi
 gate "tests" env PYTHONPATH=src python -m pytest -x -q
 
 # engine matrix: the DSEEngine + cross-process shared memo store under
-# every pool transport this platform offers. This local mirror runs the
-# store-ON legs only — the "tests" gate above already ran the full suite
-# in the default configuration (fork transport, store off), and these
-# legs run serially here; the workflow's engine-matrix job fans the full
-# 3 × {on, off} grid out across parallel runners.
+# every pool transport this platform offers, plus a candidate-pruning
+# OFF leg. This local mirror runs the store-ON legs (prune on) and one
+# prune-off leg only — the "tests" gate above already ran the full suite
+# in the default configuration (fork transport, store off, prune on),
+# and these legs run serially here; the workflow's engine-matrix job
+# fans the full transport × store × prune grid out across parallel
+# runners.
 for method in fork spawn forkserver; do
     if ! python -c "import multiprocessing as m, sys; \
 sys.exit(0 if '$method' in m.get_all_start_methods() else 1)"; then
-        echo "engine matrix [$method shared=1]: SKIP (start method unavailable)"
+        echo "engine matrix [$method shared=1 prune=1]: SKIP (start method unavailable)"
         continue
     fi
-    gate "engine matrix [$method shared=1]" \
+    gate "engine matrix [$method shared=1 prune=1]" \
         env PYTHONPATH=src DFMODEL_TEST_MP_CONTEXT=$method \
-            DFMODEL_TEST_SHARED_CACHE=1 \
+            DFMODEL_TEST_SHARED_CACHE=1 DFMODEL_TEST_PRUNE=1 \
             python -m pytest -x -q tests/test_memo_store.py \
                 tests/test_dse_engine.py
 done
+if python -c "import multiprocessing as m, sys; \
+sys.exit(0 if 'fork' in m.get_all_start_methods() else 1)"; then
+    # DFMODEL_TEST_PRUNE=0 reshapes _engine-built engines; DFMODEL_PRUNE=off
+    # flips every prune="auto" default (sweep, plan_design_groups) too
+    gate "engine matrix [fork shared=1 prune=0]" \
+        env PYTHONPATH=src DFMODEL_TEST_MP_CONTEXT=fork \
+            DFMODEL_TEST_SHARED_CACHE=1 DFMODEL_TEST_PRUNE=0 \
+            DFMODEL_PRUNE=off \
+            python -m pytest -x -q tests/test_memo_store.py \
+                tests/test_dse_engine.py
+else
+    echo "engine matrix [fork shared=1 prune=0]: SKIP (start method unavailable)"
+fi
 
 # smoke benches: exercises the DSE engine end-to-end (parallel sweep,
 # memo cache + shared store, Pareto frontier, serial-vs-engine row
