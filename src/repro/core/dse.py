@@ -68,8 +68,7 @@ import dataclasses
 import math
 from typing import Callable, Iterable, Sequence
 
-from ..systems.chips import (CHIPS, INTERCONNECTS, MEMORIES, ChipSpec,
-                             InterconnectSpec, MemorySpec)
+from ..systems.chips import resolve_chip, resolve_interconnect, resolve_memory
 from ..systems.system import SystemSpec
 from ..systems.topology import TOPOLOGIES
 from .costpower import (cost_efficiency, power_efficiency,
@@ -129,8 +128,8 @@ def design_grid(chips: Iterable[str] = DEFAULT_CHIPS,
 
 def build_system(cell: GridCell, n_chips: int) -> SystemSpec:
     chip_name, mem_name, net_name, topo_name = cell
-    chip, mem = CHIPS[chip_name], MEMORIES[mem_name]
-    net = INTERCONNECTS[net_name]
+    chip, mem = resolve_chip(chip_name), resolve_memory(mem_name)
+    net = resolve_interconnect(net_name)
     topo = TOPOLOGIES[topo_name](n_chips, net)
     return SystemSpec(f"{chip_name}-{mem_name}-{net_name}-{topo_name}",
                       chip, mem, topo)

@@ -22,7 +22,9 @@ The engine evaluates the same design grid as the serial reference
   including every float in ``DesignPoint.row()`` — is identical to the
   serial sweep's, regardless of worker count or completion order. The pool
   transport is configurable via ``mp_context`` (fork / spawn / forkserver);
-  by default fork is used when safe and spawn once jax is loaded.
+  by default fork is used when safe and forkserver once jax is loaded
+  (forking a process that already started jax's threads is a deadlock
+  risk; the forkserver's template process predates them).
 * **cached**: the inner solves (TP sharding, PP min-max partition, the
   memory-independent inter-chip plan, dim subdivision, the intra-chip pass)
   are memoised in ``repro.core.memo`` under structural keys. Workers forked
@@ -51,16 +53,18 @@ import multiprocessing
 import os
 import pickle
 import sys
+import time
 import warnings
 from typing import Callable, Iterable, Iterator, Sequence
 
 from ..systems.system import SystemSpec
 from .dse import (CERTIFY_EVERY, DEFAULT_CHIPS, DEFAULT_MEM_NET,
                   DEFAULT_TOPOLOGIES, DesignPoint, GridCell, PlannedGroup,
-                  PlannedPoint, design_grid, evaluate_design_point,
-                  plan_design_cells, plan_design_groups, price_planned)
-from .interchip import (TrainWorkload, certify_scalar_rows,
-                        certify_winner_rows, resolve_prune)
+                  PlannedPoint, _group_cells, design_grid,
+                  evaluate_design_point, plan_design_cells,
+                  plan_design_groups, price_planned)
+from .interchip import (TrainWorkload, candidate_matrix, certify_scalar_rows,
+                        certify_winner_rows, resolve_prune, winner_rows)
 from .memo import GLOBAL_CACHE, caching_disabled
 from .memo_store import StoreHandle, choose_backend, create_store
 from .pricing import PlanMatrix, price_plans
@@ -453,6 +457,201 @@ class DSEEngine:
         return {n: self.sweep_scenario(n, smoke=smoke)
                 for n in (names or scenario_names())}
 
+    # -- budgeted search -----------------------------------------------------
+    def search(self, work_fn: Callable[[SystemSpec], TrainWorkload],
+               spec: SweepSpec = SweepSpec(), *,
+               policy, budget: int,
+               certify: bool = True,
+               progress: Callable[[dict], None] | None = None):
+        """Budgeted adaptive exploration of ``spec``'s design grid.
+
+        ``policy`` (a :class:`repro.search.SearchPolicy`) proposes
+        batches of grid indices; each batch is planned + priced through
+        the same columnar pipeline as :meth:`sweep` (one batched
+        ``plan_design_cells`` + ``price_planned`` call per batch on the
+        configured pricing backend) and the priced observations feed
+        back into the policy.  The loop ends when the policy stops
+        asking or ``budget`` full evaluations are spent.
+
+        The proposal contract is enforced strictly — an index out of
+        range, proposed twice, or past the budget raises RuntimeError
+        (exactly-once evaluation accounting is part of the result's
+        meaning, not a best-effort hint).  Per-round progress records
+        (evals, elapsed, ETA) accumulate in the result and stream
+        through ``progress`` when given.
+
+        ``certify=True`` (default, the house rule) evaluates the FULL
+        grid through the identical machinery afterwards and requires the
+        search winner to be the exhaustive argmin of the lexicographic
+        ``(infeasible, iter_time, index)`` objective — a policy that
+        misses the true winner raises rather than returning silently
+        wrong results.  All values are bit-identical between search and
+        oracle (same certified planning/pricing path), so the
+        comparison is exact, not tolerance-based.
+        """
+        from ..search.policy import SearchContext, SearchResult
+        from ..search.surrogate import cell_features
+
+        grid = spec.grid()
+        n = len(grid)
+        if n == 0:
+            raise ValueError("search needs a non-empty design grid")
+        if int(budget) < 1:
+            raise ValueError(f"budget must be >= 1, got {budget}")
+        granted = min(int(budget), n)
+        t0 = time.perf_counter()
+        cheap_evals = 0
+
+        def cheap_bound(indices: Sequence[int]) -> list[tuple[bool, float]]:
+            nonlocal cheap_evals
+            idx = [int(i) for i in indices]
+            bad = [i for i in idx if not 0 <= i < n]
+            if bad:
+                raise IndexError(f"cheap_bound indices out of range "
+                                 f"(grid size {n}): {bad[:5]}")
+            out: list = [None] * len(idx)
+            cells = [grid[i] for i in idx]
+            with self._cache_mode():
+                for pos_list, work, systems in _group_cells(
+                        work_fn, cells, spec.n_chips, spec.execution):
+                    caps = [s.memory.capacity for s in systems]
+                    cands = candidate_matrix(
+                        work, systems[0], max_tp=spec.max_tp,
+                        max_pp=spec.max_pp, execution=spec.execution,
+                        prune=self.prune)
+                    if not len(cands):
+                        for pos in pos_list:
+                            out[pos] = (True, math.inf)
+                        continue
+                    sel = cands.selection()
+                    rows = winner_rows(sel["iter_time"],
+                                       sel["per_chip_mem_bytes"], caps)
+                    for pos, cap, r in zip(pos_list, caps, rows):
+                        out[pos] = (
+                            bool(sel["per_chip_mem_bytes"][r] > cap),
+                            float(sel["iter_time"][r]))
+            cheap_evals += len(idx)
+            return out
+
+        topo_vocab = {t: k for k, t in enumerate(spec.topologies)}
+
+        def features(index: int):
+            return cell_features(grid[int(index)], spec.n_chips, topo_vocab)
+
+        policy.reset(SearchContext(n_points=n, budget=granted,
+                                   cheap_bound=cheap_bound,
+                                   features=features))
+        evaluated: dict = {}
+        rounds: list[dict] = []
+        round_no = 0
+        while len(evaluated) < granted:
+            asked = [int(i) for i in policy.ask()]
+            if not asked:
+                break
+            self._check_proposals(policy, asked, evaluated, granted, n)
+            obs = self._search_eval(work_fn, spec, grid, asked,
+                                    certify=round_no % CERTIFY_EVERY == 0)
+            for o in obs:
+                evaluated[o.index] = o
+            policy.tell(obs)
+            round_no += 1
+            elapsed = time.perf_counter() - t0
+            done = len(evaluated)
+            best = min(evaluated.values(), key=lambda o: o.objective)
+            record = {"round": round_no, "asked": len(asked),
+                      "evals": done, "budget": granted,
+                      "elapsed_s": elapsed,
+                      "eta_s": elapsed / done * (granted - done),
+                      "best_index": best.index,
+                      "best_iter_time": best.iter_time,
+                      "best_feasible": best.feasible}
+            rounds.append(record)
+            if progress is not None:
+                progress(record)
+        best = (min(evaluated.values(), key=lambda o: o.objective)
+                if evaluated else None)
+        oracle_index = None
+        if certify:
+            oracle = min(
+                self._search_eval(work_fn, spec, grid, list(range(n)),
+                                  certify="sample"),
+                key=lambda o: o.objective)
+            oracle_index = oracle.index
+            if best is None or best.index != oracle.index:
+                raise RuntimeError(
+                    f"search policy {policy.name!r} missed the true argmin: "
+                    f"policy best "
+                    f"{(best.index, best.objective[:2]) if best else None} "
+                    f"vs exhaustive argmin "
+                    f"{(oracle.index, oracle.objective[:2])} "
+                    f"(budget {granted}/{n}, evals {len(evaluated)})")
+        return SearchResult(
+            policy=policy.name, budget=granted, evals_used=len(evaluated),
+            cheap_evals=cheap_evals, rounds=rounds,
+            best_index=best.index if best else -1,
+            best_point=best.point if best else None,
+            best_objective=((best.feasible, best.iter_time)
+                            if best else None),
+            evaluated=evaluated, certified=certify,
+            oracle_index=oracle_index,
+            seconds=time.perf_counter() - t0)
+
+    @staticmethod
+    def _check_proposals(policy, asked, evaluated, budget: int,
+                         n: int) -> None:
+        """Exactly-once/bounded proposal contract (violations raise)."""
+        seen: set[int] = set()
+        for i in asked:
+            if not 0 <= i < n:
+                raise RuntimeError(
+                    f"search policy {policy.name!r} proposed out-of-range "
+                    f"index {i} (grid size {n})")
+            if i in seen or i in evaluated:
+                raise RuntimeError(
+                    f"search policy {policy.name!r} proposed index {i} "
+                    f"more than once")
+            seen.add(i)
+        if len(evaluated) + len(asked) > budget:
+            raise RuntimeError(
+                f"search policy {policy.name!r} exceeded the evaluation "
+                f"budget: {len(evaluated)} evaluated + {len(asked)} "
+                f"proposed > {budget}")
+
+    def _search_eval(self, work_fn, spec: SweepSpec, grid, indices,
+                     certify: bool | str):
+        """Plan + price one proposed batch; one Observation per index.
+
+        The same columnar path as :meth:`sweep` — memory variants in the
+        batch share candidate enumerations, the backend prices one
+        batch, and ``certify`` (the engine's sampled cadence) runs the
+        scalar-scan check inside the planning call."""
+        from ..search.policy import Observation
+
+        cells = [grid[i] for i in indices]
+        with self._cache_mode():
+            planned = plan_design_cells(
+                work_fn, cells, spec.n_chips, max_tp=spec.max_tp,
+                max_pp=spec.max_pp, execution=spec.execution,
+                pricing_backend=self.pricing_backend, prune=self.prune,
+                certify=certify)
+            pts = price_planned(planned, backend=self.pricing_backend)
+        live = [i for i, p in zip(indices, planned) if p is not None]
+        by_index = dict(zip(live, pts))
+        out = []
+        for i in indices:
+            pt = by_index.get(i)
+            if pt is None:
+                out.append(Observation(index=i, cell=grid[i], feasible=False,
+                                       iter_time=math.inf, utilization=0.0,
+                                       point=None))
+            else:
+                out.append(Observation(
+                    index=i, cell=grid[i],
+                    feasible=bool(pt.plan.feasible),
+                    iter_time=float(pt.plan.iter_time),
+                    utilization=float(pt.utilization), point=pt))
+        return out
+
     # -- internals -----------------------------------------------------------
     def _should_parallelize(self, grid_size: int) -> bool:
         if self.parallel is False:
@@ -467,16 +666,22 @@ class DSEEngine:
         An explicit ``mp_context`` wins. Otherwise: forking a multithreaded
         process is a documented deadlock risk, and importing jax starts
         worker threads — so once jax is loaded (the kernel test suite, a
-        training session) we use spawn, which needs a picklable work_fn.
-        Otherwise fork, which supports closures.
+        training session) we prefer forkserver: its server process was
+        forked at first use, before jax's threads existed, so children are
+        clean while task submission still needs only picklable work_fns
+        (same contract as spawn, but without re-importing the world per
+        worker). When jax was never imported fork stays the default — it
+        supports closures and is ~4× faster cold.
         """
         if isinstance(self.mp_context, str):
             return self.mp_context
         if self.mp_context is not None:
             return self.mp_context.get_start_method()
         methods = multiprocessing.get_all_start_methods()
-        if "fork" in methods and "jax" not in sys.modules:
+        if "jax" not in sys.modules and "fork" in methods:
             return "fork"
+        if "forkserver" in methods:
+            return "forkserver"
         return "spawn"
 
     def _mp_context(self) -> multiprocessing.context.BaseContext:

@@ -425,10 +425,26 @@ PRUNE_ENV_VAR = "DFMODEL_PRUNE"
 
 PRUNE_MODES = ("on", "off", "auto")
 
+#: Accepted spellings for the ``DFMODEL_PRUNE`` environment variable.
+#: Anything else raises — silently mapping ``false`` to "on" (the
+#: pre-PR-6 behavior) meant users who thought they disabled pruning
+#: got it enabled.
+_PRUNE_SPELLINGS = {
+    "on": "on", "1": "on", "true": "on", "yes": "on",
+    "off": "off", "0": "off", "false": "off", "no": "off",
+}
+
 
 def default_prune() -> str:
     env = os.environ.get(PRUNE_ENV_VAR, "").strip().lower()
-    return env if env in ("on", "off") else "on"
+    if not env:
+        return "on"
+    try:
+        return _PRUNE_SPELLINGS[env]
+    except KeyError:
+        raise ValueError(
+            f"unknown {PRUNE_ENV_VAR} value {env!r}; expected one of "
+            f"{sorted(_PRUNE_SPELLINGS)}") from None
 
 
 def resolve_prune(policy: str | bool) -> bool:

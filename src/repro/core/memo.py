@@ -171,6 +171,45 @@ class SolveCache:
         except Exception:
             pass  # unpicklable value / full stripe / dead store: local-only
 
+    def harvest(self, space: str) -> list[tuple[Hashable, Any]]:
+        """All ``(key, value)`` pairs cached under ``space``, local tier
+        first, then any shared-tier entries not already seen locally.
+
+        This is the training-set extraction hook for surrogate models
+        (:mod:`repro.search`): after a sweep, ``harvest("candmat")``
+        yields every memoised :class:`repro.core.interchip.CandidateSet`
+        — including ones computed by *other* processes of the same sweep
+        when a shared store is attached.  Shared entries that fail to
+        unpickle (version skew, torn writes are already excluded by the
+        store) are skipped, never raised — same contract as
+        ``_shared_get``.  Purely observational: no stats counters move.
+        """
+        out = [(key, value) for (s, key), value in self._data.items()
+               if s == space]
+        shared_items = getattr(self.shared, "items", None)
+        if shared_items is None:
+            return out
+        seen = {self._shared_key((space, key)) for key, _ in out}
+        seen.discard(None)
+        try:
+            blobs = list(shared_items())
+        except Exception:
+            return out
+        for key_blob, value_blob in blobs:
+            if key_blob in seen:
+                continue
+            try:
+                full = pickle.loads(key_blob)
+                if (not isinstance(full, tuple) or len(full) != 2
+                        or full[0] != space):
+                    continue
+                found = pickle.loads(value_blob)
+                if isinstance(found, tuple) and len(found) == 1:
+                    out.append((full[1], found[0]))
+            except Exception:
+                continue
+        return out
+
     def stats(self) -> CacheStats:
         sizes: Counter[str] = Counter(space for space, _ in self._data)
         spaces = set(self._hits) | set(self._misses) | set(sizes)

@@ -250,6 +250,33 @@ class MmapStore:
         never buffered — the data stripes are always current)."""
         self._flush_stats()
 
+    def items(self) -> list[tuple[bytes, bytes]]:
+        """Every stored ``(key, value)`` entry, stripe by stripe.
+
+        The harvest surface for surrogate training
+        (:meth:`repro.core.memo.SolveCache.harvest`): one shared lock per
+        stripe, so concurrent writers are never blocked for long and each
+        stripe snapshot is internally consistent (entries are append-only,
+        a later put only grows the log past the ``used`` mark we read).
+        Stats counters do not move — harvesting is observational.
+        """
+        self._ensure_process()
+        out: list[tuple[bytes, bytes]] = []
+        for stripe in range(self.n_stripes):
+            off = self._data_off + stripe * self.stripe_bytes
+            with self._locked(off, self.stripe_bytes, exclusive=False):
+                used, _ = _STRIPE_HDR.unpack_from(self._mm, off)
+                pos = off + _STRIPE_HDR.size
+                end = pos + used
+                mm = self._mm
+                while pos < end:
+                    klen, vlen = _ENTRY_HDR.unpack_from(mm, pos)
+                    pos += _ENTRY_HDR.size
+                    out.append((bytes(mm[pos:pos + klen]),
+                                bytes(mm[pos + klen:pos + klen + vlen])))
+                    pos += klen + vlen
+        return out
+
     # -- shared stats --
     def _bump(self, space: str, hits: bool = False, misses: bool = False,
               inserts: bool = False, dropped: bool = False) -> None:
@@ -374,6 +401,10 @@ def serve(path: str) -> None:
                             bump(space)[0 if value is not None else 1] += 1
                             values.append(value)
                     _send_msg(conn, values)
+                elif op == "items":
+                    with lock:
+                        snapshot = list(data.items())
+                    _send_msg(conn, snapshot)
                 elif op == "stats":
                     with lock:
                         out = _empty_stats("server")
@@ -505,6 +536,18 @@ class ServerClient:
         self.flush()
         return self._rpc(("stats",))
 
+    def items(self) -> list[tuple[bytes, bytes]]:
+        """Every stored ``(key, value)`` entry (harvest surface; a dead
+        server yields the empty list, matching the degrade-to-miss
+        contract of ``get``)."""
+        if self._dead and self._pid == os.getpid():
+            return []
+        try:
+            self.flush()
+            return self._rpc(("items",)) or []
+        except OSError:
+            return []
+
     def shutdown_server(self) -> None:
         self.flush()
         self._rpc(("shutdown",))
@@ -566,6 +609,9 @@ class ServerStore:
 
     def stats(self) -> dict:
         return self._client.stats()
+
+    def items(self) -> list[tuple[bytes, bytes]]:
+        return self._client.items()
 
     def handle(self) -> StoreHandle:
         return StoreHandle("server", self.path)

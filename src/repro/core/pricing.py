@@ -220,7 +220,13 @@ def random_plan_vectors(n: int, seed: int = 0) -> list[PlanVector]:
 
 def default_backend() -> str:
     env = os.environ.get(BACKEND_ENV_VAR, "").strip().lower()
-    return env if env in BACKENDS else "numpy"
+    if not env:
+        return "numpy"
+    if env not in BACKENDS:
+        raise ValueError(
+            f"unknown {BACKEND_ENV_VAR} value {env!r}; expected one of "
+            f"{BACKENDS}")
+    return env
 
 
 def available_backends() -> list[str]:

@@ -1,0 +1,40 @@
+"""Budgeted search policies over DSE design grids (``repro.search``).
+
+Public surface:
+
+* :class:`~repro.search.policy.SearchPolicy` — the ask/tell interface
+  :meth:`repro.core.dse_engine.DSEEngine.search` drives, plus the three
+  shipped policies: :class:`~repro.search.policy.RandomSearch`,
+  :class:`~repro.search.policy.SuccessiveHalving` (cheap selection-bound
+  rung → full-pricing promotion) and
+  :class:`~repro.search.surrogate.SurrogateSearch` (ridge on system
+  features, refit + re-rank each round).
+* :class:`~repro.search.grid.DenseGridSpec` — scaled-variant grids far
+  denser than the paper's 80 systems.
+* :func:`~repro.search.surrogate.plan_feature_rows` /
+  :func:`~repro.search.surrogate.fit_plan_ridge` — the memo-store
+  harvest feeding plan-level surrogates (the ROADMAP's
+  learned-cost-model stepping stone).
+"""
+from .grid import DenseGridSpec, scaled_name
+from .policy import (Observation, RandomSearch, SearchContext, SearchPolicy,
+                     SearchResult, SuccessiveHalving)
+from .surrogate import (PLAN_FEATURE_FIELDS, RidgeModel, SurrogateSearch,
+                        cell_features, fit_plan_ridge, plan_feature_rows)
+
+__all__ = [
+    "DenseGridSpec",
+    "Observation",
+    "PLAN_FEATURE_FIELDS",
+    "RandomSearch",
+    "RidgeModel",
+    "SearchContext",
+    "SearchPolicy",
+    "SearchResult",
+    "SuccessiveHalving",
+    "SurrogateSearch",
+    "cell_features",
+    "fit_plan_ridge",
+    "plan_feature_rows",
+    "scaled_name",
+]

@@ -1,0 +1,79 @@
+"""Dense design grids: scaled technology variants between Table V points.
+
+The paper's §VI.C sweep covers 80 systems; the ROADMAP targets spaces
+orders of magnitude denser.  :class:`DenseGridSpec` generates such a
+space by interpolating each registered technology along a performance
+scale axis — ``"H100@x1.25"`` is an H100 with 1.25× the per-tile
+compute at unchanged price/power, resolved by the pure name parsers in
+:mod:`repro.systems.chips` (no registry mutation, so a grid cell means
+the same system in every pool worker under any start method).
+
+Scaling compute/bandwidth while holding price and power fixed keeps the
+scale axis *interesting*: a faster variant is better on utilization AND
+cost efficiency, so the Pareto surface shifts instead of merely
+stretching, and the search policies have real structure to exploit.
+
+The default shape is 12 chips × 24 memory/interconnect combinations ×
+3 topologies = 864 cells — the ≥ 10×-the-paper grid
+``benchmarks/bench_dse.py``'s ``search`` block runs budgeted policies
+against.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from ..core.dse_engine import SweepSpec
+from ..systems.chips import _split_scaled
+
+
+def scaled_name(base: str, scale: float) -> str:
+    """Canonical scaled-variant name (``scale == 1`` keeps the base name)."""
+    if scale == 1.0:
+        return base
+    name = f"{base}@x{scale:g}"
+    _split_scaled(name)  # validate base/scale round-trip early
+    return name
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseGridSpec:
+    """Cartesian generator of scaled-variant design grids.
+
+    ``spec()`` materializes the grid as a plain
+    :class:`~repro.core.dse_engine.SweepSpec`, so every engine entry
+    point (``sweep`` / ``sweep_iter`` / ``search``) consumes it
+    unchanged.
+    """
+
+    n_chips: int = 64
+    base_chips: tuple[str, ...] = ("H100", "TPUv4", "SN30")
+    chip_scales: tuple[float, ...] = (0.75, 1.0, 1.25, 1.5)
+    base_memories: tuple[str, ...] = ("DDR", "HBM")
+    memory_scales: tuple[float, ...] = (0.75, 1.0, 1.25)
+    base_nets: tuple[str, ...] = ("PCIe", "NVLink")
+    net_scales: tuple[float, ...] = (1.0, 1.5)
+    topologies: tuple[str, ...] = ("torus2d", "dragonfly", "dgx2")
+    max_tp: int | None = 16
+    max_pp: int | None = None
+    execution: str = "auto"
+
+    def chips(self) -> tuple[str, ...]:
+        return tuple(scaled_name(c, s) for c in self.base_chips
+                     for s in self.chip_scales)
+
+    def mem_net(self) -> tuple[tuple[str, str], ...]:
+        return tuple((scaled_name(m, ms), scaled_name(n, ns))
+                     for m in self.base_memories for ms in self.memory_scales
+                     for n in self.base_nets for ns in self.net_scales)
+
+    def n_cells(self) -> int:
+        return (len(self.base_chips) * len(self.chip_scales)
+                * len(self.base_memories) * len(self.memory_scales)
+                * len(self.base_nets) * len(self.net_scales)
+                * len(self.topologies))
+
+    def spec(self) -> SweepSpec:
+        return SweepSpec(n_chips=self.n_chips, chips=self.chips(),
+                         topologies=self.topologies,
+                         mem_net=self.mem_net(), max_tp=self.max_tp,
+                         max_pp=self.max_pp, execution=self.execution)

@@ -112,3 +112,60 @@ ICI = InterconnectSpec("ICI", bandwidth=50 * GB, latency=200e-9,
 
 INTERCONNECTS: dict[str, InterconnectSpec] = {i.name: i
                                               for i in [PCIE, NVLINK, ICI]}
+
+
+# --- scaled variants ("H100@x1.25") ------------------------------------------
+# Dense DSE grids (repro.search.DenseGridSpec) interpolate between the
+# paper's Table V technology points by scaling a registered spec's
+# *performance* fields.  The variants are resolved by pure functions from
+# the name alone — no registry mutation — so a grid cell naming
+# "H100@x1.25" builds the same SystemSpec in every process regardless of
+# pool start method (spawn workers re-import this module fresh).
+#
+# Scaling deliberately leaves price/power untouched: a ×1.25 chip at ×1.0
+# cost is strictly better on cost efficiency, which is what creates
+# genuine Pareto trade-offs across the scale axis instead of a uniform
+# shift.
+_SCALE_SEP = "@x"
+
+
+def _split_scaled(name: str) -> tuple[str, float]:
+    """``"H100@x1.25"`` → ``("H100", 1.25)``; plain names → scale 1.0."""
+    base, sep, suffix = name.partition(_SCALE_SEP)
+    if not sep:
+        return name, 1.0
+    try:
+        scale = float(suffix)
+    except ValueError:
+        raise ValueError(f"bad scale suffix in spec name {name!r}") from None
+    if not scale > 0.0:
+        raise ValueError(f"scale must be positive in spec name {name!r}")
+    return base, scale
+
+
+def resolve_chip(name: str) -> ChipSpec:
+    base, scale = _split_scaled(name)
+    chip = CHIPS[base]
+    if scale == 1.0:
+        return chip
+    return dataclasses.replace(chip, name=name,
+                               tile_flops=chip.tile_flops * scale)
+
+
+def resolve_memory(name: str) -> MemorySpec:
+    base, scale = _split_scaled(name)
+    mem = MEMORIES[base]
+    if scale == 1.0:
+        return mem
+    return dataclasses.replace(mem, name=name,
+                               bandwidth=mem.bandwidth * scale,
+                               capacity=mem.capacity * scale)
+
+
+def resolve_interconnect(name: str) -> InterconnectSpec:
+    base, scale = _split_scaled(name)
+    net = INTERCONNECTS[base]
+    if scale == 1.0:
+        return net
+    return dataclasses.replace(net, name=name,
+                               bandwidth=net.bandwidth * scale)

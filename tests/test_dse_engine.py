@@ -366,6 +366,12 @@ def test_shared_cache_sweep_matches_serial(method):
                        shared_cache=True)
     with warnings.catch_warnings():
         warnings.simplefilter("error")  # a serial fallback would hide bugs
+        # this test forks on purpose (the explicit transport matrix);
+        # jax's at-fork advisory is expected here — the engine's AUTO
+        # pick avoiding fork once jax is loaded is covered in
+        # tests/test_search.py
+        warnings.filterwarnings("ignore", message=r"os\.fork\(\)",
+                                category=RuntimeWarning)
         pts = engine.sweep(_tiny_work, SMOKE_SPEC)
     assert [p.row() for p in pts] == [p.row() for p in ref]
     stats = engine.last_shared_stats

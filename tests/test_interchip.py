@@ -352,8 +352,15 @@ def test_prune_policy_resolution_and_env(monkeypatch):
     assert default_prune() == "on" and resolve_prune("auto")
     monkeypatch.setenv(PRUNE_ENV_VAR, "off")
     assert default_prune() == "off" and not resolve_prune("auto")
+    # boolean-ish spellings are honored ("false" used to silently mean on)
+    monkeypatch.setenv(PRUNE_ENV_VAR, "false")
+    assert default_prune() == "off" and not resolve_prune("auto")
+    monkeypatch.setenv(PRUNE_ENV_VAR, "1")
+    assert default_prune() == "on" and resolve_prune("auto")
+    # unknown spellings raise instead of silently enabling
     monkeypatch.setenv(PRUNE_ENV_VAR, "gibberish")
-    assert default_prune() == "on"
+    with pytest.raises(ValueError, match=PRUNE_ENV_VAR):
+        default_prune()
     with pytest.raises(ValueError):
         resolve_prune("sometimes")
 

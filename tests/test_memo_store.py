@@ -20,6 +20,7 @@ import concurrent.futures as cf
 import multiprocessing
 import os
 import pickle
+import sys
 
 import pytest
 
@@ -37,8 +38,15 @@ def _mp_ctx() -> multiprocessing.context.BaseContext:
         if env not in methods:
             pytest.skip(f"start method {env!r} not available")
         return multiprocessing.get_context(env)
-    return multiprocessing.get_context(
-        "fork" if "fork" in methods else methods[0])
+    # mirror DSEEngine._start_method: forking after jax started its worker
+    # threads is a deadlock risk (and emits a RuntimeWarning); forkserver
+    # keeps mmap-backend coverage (choose_backend maps it to "mmap") with a
+    # pre-jax template process
+    if "fork" in methods and "jax" not in sys.modules:
+        return multiprocessing.get_context("fork")
+    if "forkserver" in methods:
+        return multiprocessing.get_context("forkserver")
+    return multiprocessing.get_context(methods[0])
 
 
 def _make_store(backend: str, ctx):

@@ -1,0 +1,459 @@
+"""Budgeted search-policy tests (``repro.search`` + ``DSEEngine.search``).
+
+The house rule under test: on every smoke scenario, every shipped policy
+must recover the exhaustive pruned sweep's true argmin — the engine
+certifies the winner against a full-grid evaluation through the
+identical machinery and raises on a miss, so a passing test IS the
+certification.  Alongside it: seeded determinism (same seed → same
+evaluation sequence → same winner), exactly-once budget accounting
+(misbehaving policies raise, honest ones never exceed the budget), the
+cheap-bound/full-pricing agreement SuccessiveHalving's single promotion
+round rests on, the scaled-variant grid generator, the memo-store
+harvest feeding the plan-level surrogate, and the env-var spelling
+fixes (``DFMODEL_PRUNE=false`` must disable pruning, unknown spellings
+must raise).
+
+The CI search-certification legs re-run this file with
+``DFMODEL_TEST_MP_CONTEXT`` set to fork and forkserver — the two
+transports the engine's start-method auto-pick chooses between.
+"""
+from __future__ import annotations
+
+import math
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import DSEEngine, SweepSpec, clear_caches
+from repro.core.interchip import default_prune, resolve_prune
+from repro.core.memo import GLOBAL_CACHE, SolveCache
+from repro.core.memo_store import MmapStore
+from repro.core.pricing import default_backend
+from repro.search import (DenseGridSpec, Observation, RandomSearch,
+                          SearchPolicy, SuccessiveHalving, SurrogateSearch,
+                          cell_features, fit_plan_ridge, plan_feature_rows,
+                          scaled_name)
+from repro.search.surrogate import PLAN_FEATURE_FIELDS, RidgeModel
+from repro.systems.chips import (CHIPS, INTERCONNECTS, MEMORIES,
+                                 resolve_chip, resolve_interconnect,
+                                 resolve_memory)
+from repro.workloads.llm import LLAMA_68M, gpt_workload
+from repro.workloads.scenarios import get_scenario, scenario_names
+
+
+# module-level so the workload builder is picklable under spawn semantics
+def _tiny_work(system):
+    return gpt_workload(LLAMA_68M, global_batch=64, microbatch=1)
+
+
+SMOKE_SPEC = SweepSpec(n_chips=16, chips=("H100", "SN30"),
+                       topologies=("torus2d", "dgx2"),
+                       mem_net=(("DDR", "PCIe"), ("HBM", "NVLink")),
+                       max_tp=16)
+
+
+def _engine(**kwargs) -> DSEEngine:
+    env_ctx = os.environ.get("DFMODEL_TEST_MP_CONTEXT")
+    if env_ctx:
+        kwargs.setdefault("mp_context", env_ctx)
+    kwargs.setdefault("parallel", False)
+    return DSEEngine(**kwargs)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_caches():
+    clear_caches()
+    yield
+    clear_caches()
+
+
+# --- certification: every policy, every smoke scenario -----------------------
+def _policies(n: int):
+    """One instance of each shipped policy plus its certification budget.
+
+    Random and surrogate get the full grid (their certification is an
+    exhaustive walk in policy order); halving runs genuinely
+    budget-limited off its cheap bound.
+    """
+    return [(RandomSearch(seed=0, batch_size=8), n),
+            (SuccessiveHalving(eta=4), max(1, math.ceil(n / 4))),
+            (SurrogateSearch(seed=0, batch_size=6, min_train=6), n)]
+
+
+@pytest.mark.parametrize("name", scenario_names())
+def test_every_policy_certifies_on_every_smoke_scenario(name):
+    sc = get_scenario(name, smoke=True)
+    eng = _engine()
+    n = len(sc.spec.grid())
+    for policy, budget in _policies(n):
+        res = eng.search(sc.work_fn, sc.spec, policy=policy, budget=budget)
+        assert res.certified
+        assert res.best_index == res.oracle_index
+        assert res.evals_used <= res.budget <= n
+
+
+def test_halving_budget_one_still_finds_argmin():
+    # the cheap bound is the exact objective prefix, so the true argmin
+    # is the FIRST cell halving promotes — certification holds at budget 1
+    res = _engine().search(_tiny_work, SMOKE_SPEC,
+                           policy=SuccessiveHalving(eta=4), budget=1)
+    assert res.certified and res.evals_used == 1
+    assert res.best_index == res.oracle_index
+
+
+def test_search_result_bookkeeping():
+    n = len(SMOKE_SPEC.grid())
+    seen = []
+    res = _engine().search(_tiny_work, SMOKE_SPEC,
+                           policy=RandomSearch(seed=1, batch_size=3),
+                           budget=n, progress=seen.append)
+    assert res.evals_used == n == len(res.evaluated)
+    assert res.rounds == seen
+    assert [r["round"] for r in res.rounds] == list(
+        range(1, len(res.rounds) + 1))
+    assert res.rounds[-1]["evals"] == n
+    assert res.rounds[-1]["eta_s"] == 0.0
+    assert all(r["elapsed_s"] <= res.seconds for r in res.rounds)
+    best = res.evaluated[res.best_index]
+    assert res.best_objective == (best.feasible, best.iter_time)
+    assert res.best_point is best.point
+
+
+# --- seeded determinism ------------------------------------------------------
+@pytest.mark.parametrize("make", [
+    lambda seed: RandomSearch(seed=seed, batch_size=4),
+    lambda seed: SurrogateSearch(seed=seed, batch_size=4, min_train=4),
+])
+def test_same_seed_same_evaluation_sequence(make):
+    n = len(SMOKE_SPEC.grid())
+    eng = _engine()
+    runs = [eng.search(_tiny_work, SMOKE_SPEC, policy=make(seed=5),
+                       budget=n, certify=False) for _ in range(2)]
+    # dict preserves insertion order == evaluation order
+    assert list(runs[0].evaluated) == list(runs[1].evaluated)
+    assert runs[0].best_index == runs[1].best_index
+    assert runs[0].best_objective == runs[1].best_objective
+
+
+def test_different_seeds_differ_somewhere():
+    n = len(SMOKE_SPEC.grid())
+    eng = _engine()
+    orders = [list(eng.search(_tiny_work, SMOKE_SPEC,
+                              policy=RandomSearch(seed=s, batch_size=4),
+                              budget=n, certify=False).evaluated)
+              for s in range(4)]
+    assert any(o != orders[0] for o in orders[1:])
+
+
+# --- exactly-once budget accounting ------------------------------------------
+class _Misbehaving(SearchPolicy):
+    name = "misbehaving"
+
+    def __init__(self, proposals):
+        self._proposals = list(proposals)
+
+    def ask(self):
+        return self._proposals.pop(0) if self._proposals else []
+
+
+@pytest.mark.parametrize("proposals, msg", [
+    ([[0, 1], [1, 2]], "more than once"),          # duplicate across rounds
+    ([[3, 3]], "more than once"),                  # duplicate within a round
+    ([[99]], "out-of-range"),
+    ([[-1]], "out-of-range"),
+    ([[0, 1, 2], [3, 4, 5]], "exceeded the evaluation budget"),
+])
+def test_contract_violations_raise(proposals, msg):
+    with pytest.raises(RuntimeError, match=msg):
+        _engine().search(_tiny_work, SMOKE_SPEC,
+                         policy=_Misbehaving(proposals), budget=4,
+                         certify=False)
+
+
+def test_budget_clamped_to_grid_and_validated():
+    n = len(SMOKE_SPEC.grid())
+    res = _engine().search(_tiny_work, SMOKE_SPEC,
+                           policy=RandomSearch(seed=0), budget=10 * n,
+                           certify=False)
+    assert res.budget == n and res.evals_used == n
+    with pytest.raises(ValueError, match="budget"):
+        _engine().search(_tiny_work, SMOKE_SPEC,
+                         policy=RandomSearch(), budget=0)
+
+
+def test_empty_ask_ends_search_without_spending_budget():
+    res = _engine().search(_tiny_work, SMOKE_SPEC,
+                           policy=_Misbehaving([[0, 1]]), budget=6,
+                           certify=False)
+    assert res.evals_used == 2
+    assert res.best_index in (0, 1)
+
+
+# --- the cheap bound is the exact objective prefix ---------------------------
+def test_cheap_bound_matches_full_pricing():
+    grid = SMOKE_SPEC.grid()
+    eng = _engine()
+    captured = {}
+
+    class _Capture(SearchPolicy):
+        name = "capture"
+
+        def reset(self, ctx):
+            super().reset(ctx)
+            captured["bounds"] = ctx.cheap_bound(range(ctx.n_points))
+
+        def ask(self):
+            if captured.get("asked"):
+                return []
+            captured["asked"] = True
+            return list(range(self.ctx.n_points))
+
+    res = eng.search(_tiny_work, SMOKE_SPEC, policy=_Capture(),
+                     budget=len(grid))
+    for i, (infeasible, lb) in enumerate(captured["bounds"]):
+        obs = res.evaluated[i]
+        assert infeasible == (not obs.feasible)
+        if obs.point is not None:
+            # selection-column iter_time is bit-identical to full pricing
+            assert lb == obs.iter_time
+    assert res.cheap_evals == len(grid)
+
+
+def test_observation_objective_orders_infeasible_last():
+    cell = SMOKE_SPEC.grid()[0]
+    good = Observation(index=1, cell=cell, feasible=True, iter_time=2.0,
+                       utilization=0.5, point=None)
+    slow = Observation(index=0, cell=cell, feasible=True, iter_time=3.0,
+                       utilization=0.5, point=None)
+    infeasible = Observation(index=2, cell=cell, feasible=False,
+                             iter_time=1.0, utilization=0.5, point=None)
+    undecomposable = Observation(index=3, cell=cell, feasible=False,
+                                 iter_time=math.inf, utilization=0.0,
+                                 point=None)
+    ranked = sorted([undecomposable, infeasible, slow, good],
+                    key=lambda o: o.objective)
+    assert [o.index for o in ranked] == [1, 0, 2, 3]
+
+
+# --- dense scaled-variant grids ----------------------------------------------
+def test_scaled_name_roundtrip_and_validation():
+    assert scaled_name("H100", 1.0) == "H100"
+    assert scaled_name("H100", 1.25) == "H100@x1.25"
+    with pytest.raises(ValueError):
+        resolve_chip("H100@x0")
+    with pytest.raises(ValueError):
+        resolve_chip("H100@xfast")
+    with pytest.raises(KeyError):
+        resolve_chip("NoSuchChip@x1.5")
+
+
+def test_scaled_resolvers_scale_the_right_fields():
+    chip = resolve_chip("H100@x1.25")
+    base = CHIPS["H100"]
+    assert math.isclose(chip.tile_flops, 1.25 * base.tile_flops,
+                        rel_tol=1e-12)
+    assert chip.price == base.price and chip.power == base.power
+    mem = resolve_memory("HBM@x2")
+    assert math.isclose(mem.bandwidth, 2 * MEMORIES["HBM"].bandwidth,
+                        rel_tol=1e-12)
+    assert math.isclose(mem.capacity, 2 * MEMORIES["HBM"].capacity,
+                        rel_tol=1e-12)
+    net = resolve_interconnect("NVLink@x1.5")
+    assert math.isclose(net.bandwidth,
+                        1.5 * INTERCONNECTS["NVLink"].bandwidth,
+                        rel_tol=1e-12)
+    assert net.latency == INTERCONNECTS["NVLink"].latency
+    # unscaled names resolve to the registry objects themselves
+    assert resolve_chip("H100") is CHIPS["H100"]
+
+
+def test_dense_grid_spec_shape():
+    dg = DenseGridSpec()
+    spec = dg.spec()
+    assert dg.n_cells() == len(spec.grid()) == 864  # >= 10x the paper's 80
+    assert len(set(spec.chips)) == len(spec.chips)
+    assert len(set(spec.mem_net)) == len(spec.mem_net)
+
+
+def test_halving_certifies_dense_grid_within_eval_budget():
+    # the acceptance figure: a certified winner on the >= 800-point grid
+    # with <= 20% of exhaustive full evaluations
+    spec = DenseGridSpec().spec()
+    n = len(spec.grid())
+    res = _engine().search(_tiny_work, spec, policy=SuccessiveHalving(eta=8),
+                           budget=max(1, n // 5))
+    assert res.certified and res.best_index == res.oracle_index
+    assert res.evals_used / n <= 0.2
+    assert res.cheap_evals == n
+
+
+# --- surrogate internals -----------------------------------------------------
+def test_ridge_recovers_linear_map():
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(64, 3))
+    y = X @ [2.0, -1.0, 0.5] + 3.0
+    model = RidgeModel.fit(X, y, lam=1e-8)
+    assert np.allclose(model.predict(X), y, atol=1e-6)
+
+
+def test_cell_features_are_finite_and_scale_aware():
+    vocab = {"torus2d": 0, "dgx2": 1}
+    f1 = cell_features(("H100", "HBM", "NVLink", "dgx2"), 64, vocab)
+    f2 = cell_features(("H100@x2", "HBM", "NVLink", "dgx2"), 64, vocab)
+    assert np.all(np.isfinite(f1)) and f1.shape == f2.shape
+    assert f2[0] > f1[0]                      # scaled chip: more flops
+    assert np.array_equal(f1[1:], f2[1:])     # everything else unchanged
+
+
+def test_surrogate_validates_warm_start_and_explore():
+    with pytest.raises(ValueError, match="explore"):
+        SurrogateSearch(explore=1.5)
+    bad = SurrogateSearch(warm_start=(np.zeros((2, 3)), np.zeros(2)))
+    with pytest.raises(ValueError, match="warm_start"):
+        _engine().search(_tiny_work, SMOKE_SPEC, policy=bad,
+                         budget=4, certify=False)
+
+
+# --- memo-store harvest + plan-level surrogate -------------------------------
+def test_harvest_local_entries():
+    cache = SolveCache()
+    cache.get_or_compute("spacex", ("a",), lambda: 1)
+    cache.get_or_compute("spacex", ("b",), lambda: 2)
+    cache.get_or_compute("other", ("a",), lambda: 3)
+    assert sorted(cache.harvest("spacex")) == [(("a",), 1), (("b",), 2)]
+    assert cache.harvest("empty") == []
+
+
+def test_harvest_sees_shared_store_entries():
+    store = MmapStore()
+    try:
+        writer = SolveCache()
+        writer.attach_shared(store)
+        writer.get_or_compute("spacex", ("k",), lambda: 42)
+        reader = SolveCache()
+        reader.attach_shared(store)
+        assert reader.harvest("spacex") == [(("k",), 42)]
+        # local entries win over (identical) shared ones: no duplicates
+        writer_rows = writer.harvest("spacex")
+        assert writer_rows == [(("k",), 42)]
+    finally:
+        store.close()
+
+
+def test_plan_feature_rows_and_ridge_from_sweep():
+    assert plan_feature_rows()[0].shape == (0, len(PLAN_FEATURE_FIELDS))
+    assert fit_plan_ridge() is None
+    eng = _engine()
+    res = eng.search(_tiny_work, SMOKE_SPEC, policy=RandomSearch(seed=0),
+                     budget=len(SMOKE_SPEC.grid()), certify=False)
+    X, y = plan_feature_rows(GLOBAL_CACHE)
+    assert len(X) == len(y) > 0 and X.shape[1] == len(PLAN_FEATURE_FIELDS)
+    assert np.all(np.isfinite(X)) and np.all(y > 0)
+    model = fit_plan_ridge(GLOBAL_CACHE)
+    pred = model.predict(X)
+    # sanity, not accuracy: the fit explains more variance than the mean
+    target = np.log10(y)
+    assert np.mean((pred - target) ** 2) < np.var(target)
+    del res
+
+
+# --- env-var spelling regressions --------------------------------------------
+@pytest.mark.parametrize("spelling, mode", [
+    ("on", "on"), ("1", "on"), ("true", "on"), ("yes", "on"),
+    ("off", "off"), ("0", "off"), ("false", "off"), ("no", "off"),
+    ("TRUE", "on"), (" False ", "off"),
+])
+def test_prune_env_spellings(monkeypatch, spelling, mode):
+    monkeypatch.setenv("DFMODEL_PRUNE", spelling)
+    assert default_prune() == mode
+    assert resolve_prune("auto") is (mode == "on")
+
+
+@pytest.mark.parametrize("bad", ["disabled", "2", "offf", "none"])
+def test_prune_env_unknown_raises(monkeypatch, bad):
+    monkeypatch.setenv("DFMODEL_PRUNE", bad)
+    with pytest.raises(ValueError, match="unknown DFMODEL_PRUNE"):
+        default_prune()
+    with pytest.raises(ValueError, match="unknown DFMODEL_PRUNE"):
+        resolve_prune("auto")
+
+
+def test_prune_env_unset_or_empty_defaults_on(monkeypatch):
+    monkeypatch.delenv("DFMODEL_PRUNE", raising=False)
+    assert default_prune() == "on"
+    monkeypatch.setenv("DFMODEL_PRUNE", "")
+    assert default_prune() == "on"
+
+
+@pytest.mark.parametrize("off_spelling", ["false", "0", "no"])
+def test_prune_env_false_actually_disables_pruning(monkeypatch,
+                                                   off_spelling):
+    # the regression this PR fixes: "false" used to be read as enabled
+    stats = {}
+    for spelling in (off_spelling, "true"):
+        monkeypatch.setenv("DFMODEL_PRUNE", spelling)
+        clear_caches()
+        eng = DSEEngine(parallel=False, phased=True)
+        eng.sweep(_tiny_work, SMOKE_SPEC)
+        stats[spelling] = eng.last_plan_stats
+    off, on = stats[off_spelling], stats["true"]
+    assert off["prune"] is False
+    assert off["priced"] == off["enumerated"]        # nothing filtered
+    assert on["prune"] is True
+    assert on["priced"] < on["enumerated"]           # pruning engaged
+
+
+@pytest.mark.parametrize("bad", ["cuda", "numpyy", "torch"])
+def test_pricing_backend_env_unknown_raises(monkeypatch, bad):
+    monkeypatch.setenv("DFMODEL_PRICING_BACKEND", bad)
+    with pytest.raises(ValueError, match="unknown DFMODEL_PRICING_BACKEND"):
+        default_backend()
+
+
+def test_pricing_backend_env_known_spellings(monkeypatch):
+    monkeypatch.delenv("DFMODEL_PRICING_BACKEND", raising=False)
+    assert default_backend() == "numpy"
+    for backend in ("numpy", "jax", "pallas"):
+        monkeypatch.setenv("DFMODEL_PRICING_BACKEND", backend)
+        assert default_backend() == backend
+    monkeypatch.setenv("DFMODEL_PRICING_BACKEND", "NumPy")
+    assert default_backend() == "numpy"
+
+
+# --- start-method auto-pick (fork-after-jax fix) -----------------------------
+def _probe_start_method(preamble: str) -> str:
+    code = (f"import sys\n{preamble}\n"
+            "from repro.core.dse_engine import DSEEngine\n"
+            "print(DSEEngine()._start_method())")
+    env = dict(os.environ,
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.join(os.path.dirname(__file__), "..", "src")]
+                   + os.environ.get("PYTHONPATH", "").split(os.pathsep)))
+    env.pop("DFMODEL_TEST_MP_CONTEXT", None)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=120)
+    assert out.returncode == 0, out.stderr
+    return out.stdout.strip()
+
+
+@pytest.mark.skipif("fork" not in
+                    __import__("multiprocessing").get_all_start_methods(),
+                    reason="platform has no fork")
+def test_auto_start_method_prefers_fork_without_jax():
+    assert _probe_start_method(
+        "assert 'jax' not in sys.modules") == "fork"
+
+
+@pytest.mark.skipif("forkserver" not in
+                    __import__("multiprocessing").get_all_start_methods(),
+                    reason="platform has no forkserver")
+def test_auto_start_method_prefers_forkserver_once_jax_loaded():
+    pytest.importorskip("jax")
+    assert _probe_start_method("import jax") == "forkserver"
+
+
+def test_explicit_mp_context_still_wins():
+    assert DSEEngine(mp_context="spawn")._start_method() == "spawn"

@@ -23,6 +23,13 @@ Runs the smoke `speedup_report` (the same measurement `benchmarks.run
   each other's solves), with the shared hit-rate above the absolute
   floor $DFMODEL_BENCH_SHARED_MIN_RATE (default 0.002 — the rate is
   pool-scheduling-dependent, so the floor is deliberately loose);
+* **budgeted search** — the report's `search` block must show every
+  shipped policy certified on the smoke grid (winner identical to the
+  exhaustive argmin, evaluations within budget) and the dense-grid
+  successive-halving run certified while spending
+  ≤ $DFMODEL_BENCH_SEARCH_MAX_FRAC of exhaustive evaluations (default
+  0.2 — the paper-scale sweep replaced by a budgeted search) at no less
+  than `baseline / $DFMODEL_BENCH_SLOWDOWN` search points/sec;
 * **candidate pruning** — the report's `prune` block must show the
   pruning stage enabled with `winners_identical` true (the prune-on
   engine's DesignPoint rows reproduce the prune-off engine's
@@ -81,11 +88,35 @@ def _shared_hit_rate(report: dict) -> float:
     return shared.get("hits", 0) / total if total else 0.0
 
 
+def _check_search_entry(problems: list[str], label: str, entry: dict,
+                        base_entry: dict, slowdown: float) -> None:
+    """Certification + budget accounting + throughput floor for one
+    search entry (a smoke policy or the dense-grid run)."""
+    if not entry.get("certified", False):
+        problems.append(f"{label}: certification did not run")
+    if not entry.get("winner_identical", False):
+        problems.append(
+            f"{label}: winner {entry.get('best_index')} != exhaustive "
+            f"argmin {entry.get('oracle_index')}")
+    if entry.get("evals_used", 0) > entry.get("budget", 0):
+        problems.append(
+            f"{label}: {entry.get('evals_used')} evaluations exceed the "
+            f"budget {entry.get('budget')}")
+    floor = base_entry.get("points_per_s", 0.0) / slowdown
+    if entry.get("points_per_s", 0.0) < floor:
+        problems.append(
+            f"{label}: {entry.get('points_per_s', 0.0):.1f} search "
+            f"points/s < {floor:.1f} (baseline "
+            f"{base_entry.get('points_per_s', 0.0):.1f} / slowdown "
+            f"limit {slowdown:g})")
+
+
 def compare(fresh: dict, base: dict,
             slowdown: float, min_speedup: float,
             hit_drop: float, shared_min_hits: int = 1,
             shared_min_rate: float = 0.002,
-            prune_slack: float = 1.5) -> list[str]:
+            prune_slack: float = 1.5,
+            search_max_frac: float = 0.2) -> list[str]:
     """Return a list of human-readable regression messages (empty = pass)."""
     problems: list[str] = []
     if not fresh.get("rows_identical", False):
@@ -159,6 +190,36 @@ def compare(fresh: dict, base: dict,
             problems.append(
                 f"prune-on throughput {on:.1f} points/s < prune-off "
                 f"{off:.1f} / slack {prune_slack:g}")
+    # the budgeted-search block: every shipped policy certified on the
+    # smoke grid, the dense-grid halving run certified within its
+    # evaluation-fraction cap
+    search = fresh.get("search")
+    if not search:
+        problems.append("search block missing: the budgeted-search "
+                        "benchmark did not run")
+    else:
+        base_search = base.get("search") or {}
+        base_pols = (base_search.get("smoke") or {}).get("policies", {})
+        fresh_pols = (search.get("smoke") or {}).get("policies", {})
+        for pol in base_pols:
+            if pol not in fresh_pols:
+                problems.append(f"search policy {pol!r} missing from the "
+                                f"fresh report")
+        for pol, entry in fresh_pols.items():
+            _check_search_entry(problems, f"search:{pol}", entry,
+                                base_pols.get(pol, {}), slowdown)
+        dense = search.get("dense")
+        if not dense:
+            problems.append("search.dense missing: the dense-grid "
+                            "budgeted search did not run")
+        else:
+            _check_search_entry(problems, "search:dense", dense,
+                                base_search.get("dense", {}), slowdown)
+            frac = dense.get("eval_frac", 1.0)
+            if frac > search_max_frac:
+                problems.append(
+                    f"search:dense spent {frac:.3f} of exhaustive "
+                    f"evaluations > cap {search_max_frac:g}")
     return problems
 
 
@@ -182,6 +243,8 @@ def main() -> int:
     shared_min_rate = float(os.environ.get("DFMODEL_BENCH_SHARED_MIN_RATE",
                                            "0.002"))
     prune_slack = float(os.environ.get("DFMODEL_BENCH_PRUNE_SLACK", "1.5"))
+    search_max_frac = float(os.environ.get("DFMODEL_BENCH_SEARCH_MAX_FRAC",
+                                           "0.2"))
 
     fresh = _fresh_report(args.fresh_out)
     if args.update:
@@ -198,7 +261,8 @@ def main() -> int:
     problems = compare(fresh, base, slowdown, min_speedup, hit_drop,
                        shared_min_hits=shared_min_hits,
                        shared_min_rate=shared_min_rate,
-                       prune_slack=prune_slack)
+                       prune_slack=prune_slack,
+                       search_max_frac=search_max_frac)
     for path, vals in fresh.get("paths", {}).items():
         print(f"  {path:20s} {vals['points_per_s']:10.1f} points/s "
               f"(baseline "
@@ -213,6 +277,17 @@ def main() -> int:
           f"{prune.get('priced', 0)} priced "
           f"({prune.get('shrink', 1.0):.2f}x rows), winners identical: "
           f"{prune.get('winners_identical', False)}")
+    search = fresh.get("search") or {}
+    for pol, entry in (search.get("smoke") or {}).get("policies",
+                                                      {}).items():
+        print(f"  search:{pol:10s} {entry.get('evals_used', 0):4d}/"
+              f"{entry.get('grid_points', 0)} evals, certified: "
+              f"{entry.get('winner_identical', False)}")
+    dense = search.get("dense") or {}
+    print(f"  search:dense      {dense.get('evals_used', 0):4d}/"
+          f"{dense.get('grid_points', 0)} evals "
+          f"(frac {dense.get('eval_frac', 1.0):.3f}), certified: "
+          f"{dense.get('winner_identical', False)}")
     if problems:
         print("bench gate: REGRESSION", file=sys.stderr)
         for p in problems:

@@ -85,6 +85,21 @@ for backend in numpy jax pallas; do
             python tools/check_pricing_backend.py
 done
 
+# search certification: every budgeted policy must recover the
+# exhaustive argmin on every smoke scenario (the search tests raise on
+# a miss), under both pool regimes the start-method auto-pick chooses
+# between — fork (jax never imported) and forkserver (jax loaded).
+for method in fork forkserver; do
+    if ! python -c "import multiprocessing as m, sys; \
+sys.exit(0 if '$method' in m.get_all_start_methods() else 1)"; then
+        echo "search certification [$method]: SKIP (start method unavailable)"
+        continue
+    fi
+    gate "search certification [$method]" \
+        env PYTHONPATH=src DFMODEL_TEST_MP_CONTEXT=$method \
+            python -m pytest -x -q tests/test_search.py
+done
+
 # bench-regression gate: fresh smoke BENCH_dse.json vs the committed
 # baseline (row identity, points/sec floors, warm phased speedup, memo
 # cache hit-rate, shared-store cross-worker hits) — tolerances in
