@@ -153,6 +153,106 @@ def search_block(sc, spec) -> dict:
             "dense": dense}
 
 
+def _stream_entry(sc, spec, target_rows: int = 131_072,
+                  chunk_rows: int = 65_536) -> dict:
+    """Raw chunked-kernel throughput of the compiled f32 backend.
+
+    Tiles one real candidate matrix up to ``target_rows`` rows and prices
+    it in fixed ``chunk_rows`` blocks — the streaming regime
+    ``DSEEngine.reprice_grid`` runs in, minus the per-group certification
+    overhead, so ``rows_per_s`` here is the kernel-side ceiling. Chunks
+    are a power of two, so after the first block every block reuses the
+    same cached executable."""
+    import numpy as np
+
+    from repro.core.dse import build_system, candidate_matrix
+    from repro.core.pricing import price_plans
+
+    grid = spec.grid()
+    system = build_system(grid[0], spec.n_chips)
+    work = sc.work_fn(system)
+    cands = candidate_matrix(work, system, max_tp=spec.max_tp,
+                             max_pp=spec.max_pp, execution=spec.execution)
+    cols = cands.matrix.cols
+    n = len(next(iter(cols.values())))
+    reps = -(-target_rows // n)
+    big = {k: np.tile(v, reps) for k, v in cols.items()}
+    rows = n * reps
+    t0 = time.perf_counter()
+    for off in range(0, rows, chunk_rows):
+        sl = {k: v[off:off + chunk_rows] for k, v in big.items()}
+        price_plans(sl, backend="pallas-compiled")
+    dt = time.perf_counter() - t0
+    return {"rows": rows, "chunk_rows": chunk_rows, "seconds": dt,
+            "rows_per_s": rows / dt if dt else float("inf")}
+
+
+def compiled_block(sc, spec) -> dict:
+    """The report's ``compiled`` block: the f32 drift-budget contract.
+
+    * ``smoke`` — every shipped smoke scenario swept serially with
+      ``pricing_backend="pallas-compiled"`` next to a ``numpy`` twin;
+      ``winners_identical`` compares the full ``DesignPoint.row()``
+      lists (the sweep itself already certifies banded selection
+      against the f64 reference in-call — certify-or-die — so the row
+      comparison is the end-to-end proof on top), and ``drift``
+      carries the engine's aggregated band accounting.
+    * ``grid`` — :meth:`DSEEngine.reprice_grid` over a
+      ``DenseGridSpec.dense(100_000)`` grid (≥ 10⁵ cells): the
+      chunk-streamed whole-grid pricing report, winners certified per
+      group under the drift band, ``repriced_frac`` the fraction of
+      candidate rows that needed the exact f64 re-price.
+    * ``stream`` — raw chunked-kernel rows/sec on a ≥ 131072-row tiled
+      matrix (the certification-free pricing ceiling).
+
+    ``tools/check_bench.py`` gates winner identity, the grid-cell
+    floor, the re-priced-fraction ceiling, and the throughput floors.
+    On a jax-less interpreter the block is ``{"available": False}`` and
+    the gate skips it (mirroring the jax-backend legs elsewhere)."""
+    from repro.core.pricing import available_backends
+
+    if "pallas-compiled" not in available_backends():
+        return {"available": False}
+    from repro.kernels.pricing.drift import drift_band
+
+    smoke: dict[str, dict] = {}
+    for name in scenario_names():
+        ssc = get_scenario(name, smoke=True)
+        clear_caches()
+        ref = DSEEngine(phased=True, parallel=False,
+                        pricing_backend="numpy")
+        ref_rows = [p.row() for p in ref.sweep(ssc.work_fn, ssc.spec)]
+        clear_caches()
+        engine = DSEEngine(phased=True, parallel=False,
+                           pricing_backend="pallas-compiled")
+        t0 = time.perf_counter()
+        pts = engine.sweep(ssc.work_fn, ssc.spec)
+        dt = time.perf_counter() - t0
+        smoke[name] = {
+            "points": len(pts),
+            "winners_identical": [p.row() for p in pts] == ref_rows,
+            "seconds": dt,
+            "points_per_s": len(pts) / dt if dt else float("inf"),
+            "drift": engine.last_drift_stats,
+        }
+    grid_engine = DSEEngine(phased=True, parallel=False,
+                            pricing_backend="pallas-compiled")
+    grid = grid_engine.reprice_grid(sc.work_fn,
+                                    DenseGridSpec.dense(100_000).spec())
+    stream = _stream_entry(sc, spec)
+    return {
+        "available": True,
+        "backend": "pallas-compiled",
+        "band": drift_band(),
+        "winners_identical": (grid["winners_identical"]
+                              and all(e["winners_identical"]
+                                      for e in smoke.values())),
+        "smoke": smoke,
+        "grid": grid,
+        "stream": stream,
+    }
+
+
 def _frontier_rows(name: str, result) -> list[dict]:
     return [{"workload": name, "pareto": True, **p.row()}
             for p in result.frontier]
@@ -250,6 +350,7 @@ def speedup_report(scenario_name: str = "llm", smoke: bool = True,
     measure("cold_parallel_shared", lambda: shared.sweep(sc.work_fn, spec))
     shared_stats = shared.last_shared_stats
     search = search_block(sc, spec)
+    compiled = compiled_block(sc, spec)
 
     ref = rows_by_path["serial_uncached"]
     identical = all(rows == ref for rows in rows_by_path.values())
@@ -307,6 +408,11 @@ def speedup_report(scenario_name: str = "llm", smoke: bool = True,
         # argmin (the search call raises otherwise), plus the dense-grid
         # halving run whose eval_frac the gate caps at 20 % of exhaustive
         "search": search,
+        # compiled f32 pricing under the drift-budget contract: every
+        # smoke scenario's winners identical to the f64 scalar reference,
+        # the 10^5-cell dense grid certified group-by-group, plus the
+        # raw chunk-streamed kernel throughput ceiling
+        "compiled": compiled,
         "shared_cache": shared_stats,
         "cache": {"hits": stats.hits, "misses": stats.misses,
                   "entries": stats.entries,
@@ -333,6 +439,23 @@ def speedup_report(scenario_name: str = "llm", smoke: bool = True,
                     **entry})
     out.append({"path": "search:dense", "workload": scenario_name,
                 **search["dense"]})
+    if compiled.get("available"):
+        for name, entry in compiled["smoke"].items():
+            out.append({"path": f"compiled:{name}",
+                        "points": entry["points"],
+                        "winners_identical": entry["winners_identical"],
+                        "points_per_s": entry["points_per_s"]})
+        grid = compiled["grid"]
+        out.append({"path": "compiled:grid", "cells": grid["cells"],
+                    "priced_rows": grid["priced_rows"],
+                    "chunks": grid["chunks"],
+                    "winners_identical": grid["winners_identical"],
+                    "repriced_frac": grid["repriced_frac"],
+                    "cells_per_s": grid["cells_per_s"],
+                    "rows_per_s": grid["rows_per_s"]})
+        out.append({"path": "compiled:stream", **compiled["stream"]})
+    else:
+        out.append({"path": "compiled", "available": False})
     out.extend(stats.rows())
     if shared_stats is not None:
         out.append({"space": "SHARED", "backend": shared_stats["backend"],

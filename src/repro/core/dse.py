@@ -79,7 +79,8 @@ from .interchip import (InterChipPlan, TrainWorkload, _work_key,
                         resolve_prune, select_candidates)
 from .intrachip import IntraChipResult, optimize_intra_chip
 from .memo import GLOBAL_CACHE
-from .pricing import PlanMatrix, PlanVector, default_backend, price_plans
+from .pricing import (PlanMatrix, PlanVector, default_backend,
+                      exact_backend, is_approx_backend, price_plans)
 
 
 @dataclasses.dataclass
@@ -406,12 +407,23 @@ def plan_design_groups(work_fn: Callable[[SystemSpec], TrainWorkload],
             certify_scalar_rows([p.iter_time for p in cands.plans],
                                 [p.per_chip_mem_bytes for p in cands.plans],
                                 caps, sel.rows, context=f"group {gi}")
+        drift_stats: dict | None = None
         if len(cands) and backend != "numpy":
-            check = (cands.pruned(max(caps)).priced(backend) if pruning
-                     else cands.priced(backend))
-            certify_winner_rows(check["iter_time"],
-                                check["per_chip_mem_bytes"], caps,
-                                sel.rows, backend, survivors=sel.survivors)
+            src = cands.pruned(max(caps)) if pruning else cands
+            check = src.priced(backend)
+            if is_approx_backend(backend):
+                # approximate columns: winner identity is certified under
+                # the drift-budget contract, not bit-identity
+                from ..kernels.pricing.drift import certify_banded_rows
+
+                drift_stats = certify_banded_rows(
+                    src.matrix.cols, check, caps, sel.rows, backend,
+                    survivors=sel.survivors).stats
+            else:
+                certify_winner_rows(check["iter_time"],
+                                    check["per_chip_mem_bytes"], caps,
+                                    sel.rows, backend,
+                                    survivors=sel.survivors)
         planned: list[PlannedPoint | None] = []
         for pos, system, cap, row, lrow in zip(idxs, systems, caps,
                                                sel.rows, sel.local_rows):
@@ -438,7 +450,9 @@ def plan_design_groups(work_fn: Callable[[SystemSpec], TrainWorkload],
                        if ship_matrix and sel.survivors is not None
                        else None),
             prune_stats=dict(sel.stats,
-                             scalar_certified=bool(sampled and len(cands))),
+                             scalar_certified=bool(sampled and len(cands)),
+                             **({"drift": drift_stats} if drift_stats
+                                else {})),
             full_matrix=(cands.matrix if certify is True and sampled
                          and len(cands) else None)))
     return out
@@ -477,11 +491,17 @@ def plan_design_cells(work_fn: Callable[[SystemSpec], TrainWorkload],
 def price_planned(planned: Sequence[PlannedPoint | None],
                   backend: str = "auto") -> list[DesignPoint]:
     """Batch-price planned points (``None`` entries are skipped, matching
-    the scalar sweep's infeasible-cell skip)."""
+    the scalar sweep's infeasible-cell skip).
+
+    Approximate backends resolve to their exact reference here
+    (:func:`exact_backend`): the compiled f32 path earns its keep on the
+    candidate mass during selection; the handful of *winners* that land
+    in sweep output are always priced bit-identically."""
     live = [p for p in planned if p is not None]
     if not live:
         return []
-    priced = price_plans([p.vector for p in live], backend=backend)
+    priced = price_plans([p.vector for p in live],
+                         backend=exact_backend(backend))
     return [_assemble(p, priced, i) for i, p in enumerate(live)]
 
 

@@ -64,10 +64,11 @@ from .dse import (CERTIFY_EVERY, DEFAULT_CHIPS, DEFAULT_MEM_NET,
                   evaluate_design_point, plan_design_cells,
                   plan_design_groups, price_planned)
 from .interchip import (TrainWorkload, candidate_matrix, certify_scalar_rows,
-                        certify_winner_rows, resolve_prune, winner_rows)
+                        certify_winner_rows, resolve_prune,
+                        select_candidates, winner_rows)
 from .memo import GLOBAL_CACHE, caching_disabled
 from .memo_store import StoreHandle, choose_backend, create_store
-from .pricing import PlanMatrix, price_plans
+from .pricing import PlanMatrix, is_approx_backend, price_plans
 
 
 @dataclasses.dataclass(frozen=True)
@@ -240,6 +241,38 @@ def _group_indices(grid: Sequence[GridCell]) -> list[tuple[int, ...]]:
     return [tuple(v) for v in groups.values()]
 
 
+def _chunk_groups(groups: Sequence, chunk_rows: int):
+    """Split groups into consecutive batches of at most ~``chunk_rows``
+    candidate rows (batches hold whole groups; one oversized group is its
+    own batch). This is what bounds the whole-grid re-pricing pass's peak
+    memory: a 10⁶-row candidate matrix never materializes at once —
+    fixed-size blocks stream through the kernel instead."""
+    batch: list = []
+    rows = 0
+    for g in groups:
+        n = len(g.matrix)
+        if batch and rows + n > chunk_rows:
+            yield batch
+            batch, rows = [], 0
+        batch.append(g)
+        rows += n
+    if batch:
+        yield batch
+
+
+@dataclasses.dataclass
+class _RepriceGroup:
+    """One name-group of :meth:`DSEEngine.reprice_grid`: the (pruned)
+    candidate matrix, the group's memory-variant capacities, and the
+    numpy reference winners it must reproduce. Shape-compatible with
+    ``PlannedGroup`` where ``_verify_group_winners`` reads it."""
+
+    matrix: PlanMatrix
+    capacities: tuple[float, ...]
+    winner_rows: tuple[int, ...]
+    survivors: object                  # np.ndarray | None
+
+
 #: Infrastructure failures that justify a silent-ish serial fallback (the
 #: fallback is warned about). Anything else — e.g. a work_fn bug — must
 #: propagate with its real traceback, not be retried serially.
@@ -288,11 +321,24 @@ class DSEEngine:
         each worker plans and prices a single cell.
     pricing_backend:
         ``"numpy"``, ``"jax"``, ``"pallas"`` (the interpret-mode Pallas
-        pricing kernel, :mod:`repro.kernels.pricing`), or ``"auto"`` (env
-        var ``DFMODEL_PRICING_BACKEND``, else numpy) — used for the
-        parent's batched candidate-selection and final pricing calls
+        pricing kernel, :mod:`repro.kernels.pricing`),
+        ``"pallas-compiled"`` (the compiled f32 lowering — approximate
+        columns settled through the drift-budget contract of
+        :mod:`repro.kernels.pricing.drift`; ``last_drift_stats`` reports
+        the band accounting), or ``"auto"`` (env var
+        ``DFMODEL_PRICING_BACKEND``, else numpy) — used for the parent's
+        batched candidate-selection and final pricing calls
         (:func:`repro.core.pricing.price_plans`). Workers always select on
-        the numpy reference; the parent certifies its backend against them.
+        the numpy reference; the parent certifies its backend against
+        them. Final winner pricing on an approximate backend resolves to
+        the exact reference (``pricing.exact_backend``), so sweep rows
+        stay bit-identical across every backend.
+    price_chunk_rows:
+        Upper bound (approximate — whole groups only) on candidate rows
+        per batched re-pricing call in the parent's whole-grid pass and
+        :meth:`reprice_grid`. Bounds peak memory when the grid carries
+        10⁵–10⁶ candidate rows; the default (65536) keeps one f32 block
+        comfortably cache-sized while amortizing dispatch.
     shared_cache:
         ``False`` (default) keeps worker memo caches process-private.
         ``True``/``"auto"`` layers a cross-process shared memo store
@@ -327,7 +373,8 @@ class DSEEngine:
                  phased: bool = True,
                  pricing_backend: str = "auto",
                  shared_cache: bool | str = False,
-                 prune: str | bool = "auto") -> None:
+                 prune: str | bool = "auto",
+                 price_chunk_rows: int = 65536) -> None:
         self.max_workers = max_workers or (os.cpu_count() or 1)
         self.parallel = parallel
         self.use_cache = use_cache
@@ -346,6 +393,10 @@ class DSEEngine:
         self.shared_cache = shared_cache
         resolve_prune(prune)  # reject unknown policies at construction
         self.prune = prune
+        if not isinstance(price_chunk_rows, int) or price_chunk_rows < 1:
+            raise ValueError(f"price_chunk_rows must be a positive int, "
+                             f"got {price_chunk_rows!r}")
+        self.price_chunk_rows = price_chunk_rows
         #: Plan-phase accounting of the last parallel phased sweep:
         #: {"groups", "candidates", "cells", "backend"} — the exactly-once
         #: candidate-matrix shipping contract tests/test_dse_engine.py
@@ -358,6 +409,12 @@ class DSEEngine:
         #: process's solve — the cross-worker reuse ``BENCH_dse.json``'s
         #: ``cold_parallel_shared`` row certifies.
         self.last_shared_stats: dict | None = None
+        #: Aggregated drift-band accounting of the last sweep's banded
+        #: certifications on an approximate backend ({"backend", "band",
+        #: "groups", "rows", "caps", "repriced", "ambiguous_mem",
+        #: "band_hits", "fallback_caps", "max_iter_drift",
+        #: "max_mem_drift"}), or ``None`` when no banded selection ran.
+        self.last_drift_stats: dict | None = None
 
     # -- core sweep ----------------------------------------------------------
     def sweep(self, work_fn: Callable[[SystemSpec], TrainWorkload],
@@ -370,6 +427,7 @@ class DSEEngine:
         grid = spec.grid()
         self.last_plan_stats = None
         self.last_shared_stats = None
+        self.last_drift_stats = None
         if not self.phased:
             return self._sweep_perpoint(work_fn, spec, grid)
         planned: list[PlannedPoint | None] | None = None
@@ -414,6 +472,7 @@ class DSEEngine:
         """
         grid = spec.grid()
         self.last_shared_stats = None
+        self.last_drift_stats = None
         delivered: set[int] = set()
         if self._should_parallelize(len(grid)):
             gen = self._parallel_iter(work_fn, spec, grid, stop)
@@ -886,15 +945,27 @@ class DSEEngine:
         backend = self._resolved_backend()
         live = [g for g in groups if len(g.matrix)]
         if live and backend != "numpy":
-            big = PlanMatrix.concat([g.matrix for g in live])
-            priced = price_plans(big.cols, backend=backend)
-            off = 0
-            for g in live:
-                n = len(g.matrix)
-                self._verify_group_winners(
-                    priced["iter_time"][off:off + n],
-                    priced["per_chip_mem_bytes"][off:off + n], g)
-                off += n
+            # stream fixed-size candidate blocks (price_chunk_rows) instead
+            # of concatenating the whole grid: peak memory stays bounded
+            # no matter how many candidate rows the grid carries
+            for batch in _chunk_groups(live, self.price_chunk_rows):
+                big = PlanMatrix.concat([g.matrix for g in batch])
+                priced = price_plans(big.cols, backend=backend)
+                off = 0
+                for g in batch:
+                    n = len(g.matrix)
+                    self._verify_group_winners(
+                        priced["iter_time"][off:off + n],
+                        priced["per_chip_mem_bytes"][off:off + n], g)
+                    off += n
+        # serial phased path: the banded certification ran inside
+        # plan_design_groups (matrices never shipped) and left its stats
+        # on the group — fold them in so last_drift_stats is populated
+        # on both sides of the IPC boundary
+        for g in groups:
+            in_call = (g.prune_stats or {}).get("drift")
+            if in_call:
+                self._note_drift(in_call)
         parent_certified = sum(self._certify_group_prune(g) for g in groups)
         out: list[PlannedPoint | None] = [None] * n_cells
         for g in groups:
@@ -946,9 +1017,159 @@ class DSEEngine:
 
     def _verify_group_winners(self, iter_time, mem,
                               group: PlannedGroup) -> None:
+        backend = self._resolved_backend()
+        if is_approx_backend(backend):
+            # approximate columns: certify winner identity under the
+            # drift-budget contract (exact re-pricing of the banded
+            # slivers from the group's shipped candidate matrix)
+            from ..kernels.pricing.drift import certify_banded_rows
+
+            sel = certify_banded_rows(
+                group.matrix.cols,
+                {"iter_time": iter_time, "per_chip_mem_bytes": mem},
+                group.capacities, group.winner_rows, backend,
+                survivors=group.survivors)
+            self._note_drift(sel.stats)
+            return
         certify_winner_rows(iter_time, mem, group.capacities,
-                            group.winner_rows, self._resolved_backend(),
+                            group.winner_rows, backend,
                             survivors=group.survivors)
+
+    def _note_drift(self, stats: dict) -> None:
+        """Fold one banded selection's stats into ``last_drift_stats``."""
+        agg = self.last_drift_stats
+        if agg is None:
+            agg = self.last_drift_stats = {
+                "backend": self._resolved_backend(), "band": stats["band"],
+                "groups": 0, "rows": 0, "caps": 0, "repriced": 0,
+                "ambiguous_mem": 0, "band_hits": 0, "fallback_caps": 0,
+                "max_iter_drift": 0.0, "max_mem_drift": 0.0}
+        agg["groups"] += 1
+        for key in ("rows", "caps", "repriced", "ambiguous_mem",
+                    "band_hits", "fallback_caps"):
+            agg[key] += stats[key]
+        agg["max_iter_drift"] = max(agg["max_iter_drift"],
+                                    stats["max_iter_drift"])
+        agg["max_mem_drift"] = max(agg["max_mem_drift"],
+                                   stats["max_mem_drift"])
+
+    # -- whole-grid re-pricing at scale --------------------------------------
+    def reprice_grid(self, work_fn: Callable[[SystemSpec], TrainWorkload],
+                     spec: SweepSpec = SweepSpec(),
+                     chunk_rows: int | None = None) -> dict:
+        """Price-and-certify an entire design grid's candidate space in
+        fixed-size streamed blocks — the 10⁵–10⁶-cell scaling harness for
+        the batched pricing backends.
+
+        Each (chip, net, topology) name-group of ``spec``'s grid is
+        planned ONCE: one representative :class:`SystemSpec`, one columnar
+        candidate enumeration shared by every memory variant, and the
+        numpy reference selection over the group's capacity column (memory
+        capacities resolve per *name*, so a million-cell grid never builds
+        a million systems or plan vectors — the memory axis is just
+        numbers). The groups' candidate matrices then stream through the
+        engine's pricing backend in blocks of ≤ ``chunk_rows`` rows
+        (default ``price_chunk_rows``; peak re-pricing memory is bounded
+        by the block, not the grid), and every group's winners are
+        certified against the reference — under the drift-budget contract
+        on an approximate backend (``pallas-compiled``; accounting lands
+        in ``last_drift_stats``), bit-identically otherwise.
+
+        ``work_fn`` must not depend on the memory variant of the system
+        it receives (the standard workload factories don't) — each
+        name-group sees only its representative system.
+
+        Returns a report dict: cell/group/row counts, chunk accounting,
+        phase timings + throughput (``cells_per_s``, ``rows_per_s``),
+        ``winners_identical`` (certify-or-die — the call raises rather
+        than return ``False``), and the drift-band block on approximate
+        backends.
+        """
+        backend = self._resolved_backend()
+        chunk = self.price_chunk_rows if chunk_rows is None else chunk_rows
+        if not isinstance(chunk, int) or chunk < 1:
+            raise ValueError(f"chunk_rows must be a positive int, "
+                             f"got {chunk!r}")
+        from ..systems.chips import resolve_memory
+        from .dse import build_system
+
+        grid = spec.grid()
+        self.last_drift_stats = None
+        prune_on = self._resolved_prune()
+        cap_by_name: dict[str, float] = {}
+
+        def capacity(mem_name: str) -> float:
+            cap = cap_by_name.get(mem_name)
+            if cap is None:
+                cap = cap_by_name[mem_name] = float(
+                    resolve_memory(mem_name).capacity)
+            return cap
+
+        t0 = time.perf_counter()
+        groups: list[_RepriceGroup] = []
+        enumerated = 0
+        empty_groups = 0
+        with self._cache_mode():
+            for idxs in _group_indices(grid):
+                system = build_system(grid[idxs[0]], spec.n_chips)
+                work = work_fn(system)
+                cands = candidate_matrix(work, system, max_tp=spec.max_tp,
+                                         max_pp=spec.max_pp,
+                                         execution=spec.execution,
+                                         prune=self.prune)
+                enumerated += len(cands)
+                if not len(cands):
+                    empty_groups += 1
+                    continue
+                caps = tuple(capacity(grid[i][1]) for i in idxs)
+                sel = select_candidates(cands, caps, prune=self.prune)
+                matrix = (cands.pruned(max(caps)).matrix if prune_on
+                          else cands.matrix)
+                groups.append(_RepriceGroup(matrix, caps, tuple(sel.rows),
+                                            sel.survivors))
+        plan_s = time.perf_counter() - t0
+
+        t1 = time.perf_counter()
+        priced_rows = 0
+        chunks = 0
+        with self._cache_mode():
+            for batch in _chunk_groups(groups, chunk):
+                big = PlanMatrix.concat([g.matrix for g in batch])
+                priced = price_plans(big.cols, backend=backend)
+                off = 0
+                for g in batch:
+                    n = len(g.matrix)
+                    self._verify_group_winners(
+                        priced["iter_time"][off:off + n],
+                        priced["per_chip_mem_bytes"][off:off + n], g)
+                    off += n
+                priced_rows += len(big)
+                chunks += 1
+        price_s = time.perf_counter() - t1
+        total_s = time.perf_counter() - t0
+
+        drift = self.last_drift_stats
+        return {
+            "backend": backend,
+            "cells": len(grid),
+            "groups": len(groups),
+            "empty_groups": empty_groups,
+            "enumerated": enumerated,
+            "priced_rows": priced_rows,
+            "chunk_rows": chunk,
+            "chunks": chunks,
+            "plan_s": plan_s,
+            "price_s": price_s,
+            "total_s": total_s,
+            "cells_per_s": len(grid) / total_s if total_s > 0 else 0.0,
+            "rows_per_s": priced_rows / price_s if price_s > 0 else 0.0,
+            # certify-or-die: a winner mismatch raised inside
+            # _verify_group_winners, so reaching here proves identity
+            "winners_identical": True,
+            "drift": drift,
+            "repriced_frac": (drift["repriced"] / max(1, drift["rows"])
+                              if drift else 0.0),
+        }
 
     def _serial_iter(self, work_fn, spec: SweepSpec, cells, stop):
         """Lazily stream (index, cell) pairs in order."""

@@ -29,8 +29,8 @@ from ..systems.system import SystemSpec
 from ..systems.topology import Topology, TopologyDim
 from .graph import DataflowGraph
 from .memo import GLOBAL_CACHE
-from .pricing import (PlanMatrix, PlanVector, price_plans,
-                      selection_columns)
+from .pricing import (PlanMatrix, PlanVector, is_approx_backend,
+                      price_plans, selection_columns)
 from .sharding import ShardingSolution, solve_sharding
 from .solver import enumerate_parallelism, minmax_partition
 from .utilization import kernel_utilizations
@@ -746,6 +746,12 @@ class SelectionResult:
     priced: dict | None                # priced columns over the priced rows
     survivors: np.ndarray | None       # original indices of priced rows
     stats: dict                        # enumerated / survived / priced
+    #: EXACT f64 per-chip memory of each winner, set by the drift-banded
+    #: route (approximate backends) so downstream feasibility flags never
+    #: read an f32 column; ``None`` on exact backends (read ``priced``).
+    winner_mem: list[float] | None = None
+    #: drift-band statistics of the banded selection (approx backends)
+    drift: dict | None = None
 
 
 def select_candidates(cands: CandidateSet, capacities: Sequence[float],
@@ -758,7 +764,13 @@ def select_candidates(cands: CandidateSet, capacities: Sequence[float],
     only the surviving rows go through the full batched ``price_plans``
     call on ``backend`` — strictly fewer rows priced, identical winners
     (the pruning filters are winner-preserving by construction, and the
-    property is separately certified against the scalar scan)."""
+    property is separately certified against the scalar scan).
+
+    On an *approximate* backend (``pallas-compiled``) the argmin is the
+    drift-banded selection (``repro.kernels.pricing.drift``): the f32
+    columns rank the candidate mass, the ambiguous slivers are re-priced
+    exactly, and the returned winners — plus their ``winner_mem`` — are
+    exact f64 values identical to the numpy reference selection."""
     n = len(cands)
     empty_stats = {"enumerated": n, "survived": n, "priced": 0,
                    "mem_pruned": 0, "dominance_pruned": 0}
@@ -766,14 +778,29 @@ def select_candidates(cands: CandidateSet, capacities: Sequence[float],
         return SelectionResult([-1] * len(capacities),
                                [-1] * len(capacities), None, None,
                                empty_stats)
+    approx = is_approx_backend(backend)
+    if approx:
+        from ..kernels.pricing.drift import banded_winner_rows
     if not resolve_prune(prune):
         priced = cands.priced(backend)
+        if approx:
+            bsel = banded_winner_rows(cands.matrix.cols, priced, capacities)
+            return SelectionResult(bsel.rows, list(bsel.rows), priced, None,
+                                   {**empty_stats, "priced": n},
+                                   winner_mem=bsel.winner_mem,
+                                   drift=bsel.stats)
         rows = winner_rows(priced["iter_time"],
                            priced["per_chip_mem_bytes"], capacities)
         return SelectionResult(rows, list(rows), priced, None,
                                {**empty_stats, "priced": n})
     pc = cands.pruned(max(capacities))
     priced = pc.priced(backend)
+    if approx:
+        bsel = banded_winner_rows(pc.matrix.cols, priced, capacities)
+        rows = [int(pc.survivors[r]) if r >= 0 else -1 for r in bsel.rows]
+        return SelectionResult(rows, list(bsel.rows), priced, pc.survivors,
+                               {**pc.stats, "priced": len(pc)},
+                               winner_mem=bsel.winner_mem, drift=bsel.stats)
     local = winner_rows(priced["iter_time"], priced["per_chip_mem_bytes"],
                         capacities)
     rows = [int(pc.survivors[r]) if r >= 0 else -1 for r in local]
@@ -842,6 +869,12 @@ def select_plans(cands: CandidateSet, capacities: Sequence[float],
     sel = select_candidates(cands, capacities, backend, prune)
     if sel.priced is None:
         return [None] * len(capacities)
+    if sel.winner_mem is not None:
+        # drift-banded route: winners' memory is already exact f64 —
+        # never derive a feasibility bit from an f32 column
+        return [dataclasses.replace(cands.plans[r],
+                                    feasible=bool(wm <= cap))
+                for r, wm, cap in zip(sel.rows, sel.winner_mem, capacities)]
     return [dataclasses.replace(
                 cands.plans[r],
                 feasible=bool(sel.priced["per_chip_mem_bytes"][lr] <= cap))

@@ -32,8 +32,23 @@ Backends
     mode on CPU (float64, bit-identical to numpy; the kernel package's
     ``certify()`` harness proves it row by row) and is the lowering path
     for pricing 10⁵-point candidate grids on an accelerator.
+``pallas-compiled``
+    The compiled f32 lowering of the same kernel ((8, 128)
+    sublane × lane candidate tiles, masked ragged tail, no bit-identity
+    pinning) — the 10⁵–10⁶-candidate scaling path. Outputs are float32
+    with bounded relative drift, NOT bit-identical: this is the repo's
+    only *approximate* backend, and every decision made from its columns
+    goes through the drift-budget contract
+    (:mod:`repro.kernels.pricing.drift`) — winners are re-priced exactly
+    in f64 within the declared band, so selected candidates are provably
+    identical to the scalar reference even though the mass pricing is
+    approximate. Final winner pricing resolves to the exact reference
+    backend (:func:`exact_backend`), so sweep outputs stay bit-identical
+    end to end. On CPU it runs as an interpret-mode f32 twin (same
+    tiling/masking/dtype).
 ``auto``
-    ``$DFMODEL_PRICING_BACKEND`` if set, else ``numpy``.
+    ``$DFMODEL_PRICING_BACKEND`` if set (unknown spellings raise), else
+    ``numpy``.
 
 Because every formula is elementwise over the batch axis, pricing a batch
 of one is bit-identical to pricing the point inside a batch of 80 — which
@@ -55,7 +70,13 @@ from typing import Iterable, Mapping, Sequence
 
 import numpy as np
 
-BACKENDS = ("numpy", "jax", "pallas")
+BACKENDS = ("numpy", "jax", "pallas", "pallas-compiled")
+
+#: Backends whose priced columns are approximate (bounded relative drift
+#: instead of bit-identity). Decisions over these columns must go through
+#: the drift-budget contract (``repro.kernels.pricing.drift``), and final
+#: winner pricing resolves to :func:`exact_backend`.
+APPROX_BACKENDS = ("pallas-compiled",)
 
 #: Environment override consumed by ``default_backend()`` (and therefore by
 #: ``DSEEngine(pricing_backend="auto")`` and ``tools/ci.sh``).
@@ -229,12 +250,38 @@ def default_backend() -> str:
     return env
 
 
+def resolve_backend(backend: str) -> str:
+    """Resolve ``"auto"`` to the concrete backend; validate the spelling."""
+    if backend == "auto":
+        return default_backend()
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown pricing backend {backend!r}; "
+                         f"expected one of {BACKENDS}")
+    return backend
+
+
+def is_approx_backend(backend: str) -> bool:
+    """True when the backend's priced columns carry bounded drift rather
+    than bit-identity — selections over them must be drift-banded."""
+    return resolve_backend(backend) in APPROX_BACKENDS
+
+
+def exact_backend(backend: str) -> str:
+    """The backend to price *final winners* on: approximate backends map
+    to the numpy reference (so sweep outputs stay bit-identical end to
+    end); exact backends price on themselves."""
+    resolved = resolve_backend(backend)
+    return "numpy" if resolved in APPROX_BACKENDS else resolved
+
+
 def available_backends() -> list[str]:
     out = ["numpy"]
     try:
         import jax  # noqa: F401
 
-        out.extend(["jax", "pallas"])   # pallas interpret mode needs only jax
+        # interpret-mode pallas (and the compiled backend's interpret-f32
+        # twin on CPU) need only jax
+        out.extend(["jax", "pallas", "pallas-compiled"])
     except Exception:
         pass
     return out
@@ -368,11 +415,7 @@ def _dispatch(formula, cols: Mapping[str, np.ndarray], backend: str,
     ``enable_x64``) bit-identical to numpy, and a batch of one identical
     to the same point inside a batch of 80.
     """
-    if backend == "auto":
-        backend = default_backend()
-    if backend not in BACKENDS:
-        raise ValueError(f"unknown pricing backend {backend!r}; "
-                         f"expected one of {BACKENDS}")
+    backend = resolve_backend(backend)
     n = len(next(iter(cols.values()))) if cols else 0
     if n == 0 or backend == "numpy":
         out = formula(np, cols)
@@ -380,6 +423,10 @@ def _dispatch(formula, cols: Mapping[str, np.ndarray], backend: str,
         from ..kernels.pricing.ops import pallas_columns
 
         out = pallas_columns(formula, cols)
+    elif backend == "pallas-compiled":
+        from ..kernels.pricing.ops import pallas_columns_f32
+
+        out = pallas_columns_f32(formula, cols)
     else:
         import jax
         from jax.experimental import enable_x64

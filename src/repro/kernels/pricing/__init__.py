@@ -1,6 +1,15 @@
-"""Pallas-lowered DSE pricing kernel (see ``kernel.py`` for the
-bit-exactness story). Selected via ``pricing_backend="pallas"`` on
+"""Pallas-lowered DSE pricing kernels (see ``kernel.py`` for the
+bit-exactness story and the compiled-f32 numerics contract). Selected via
+``pricing_backend="pallas"`` (interpret f64, bit-identical) or
+``"pallas-compiled"`` (f32 (8, 128) tiles, settled through the
+drift-budget contract in :mod:`.drift`) on
 ``repro.core.pricing.price_plans`` / ``DSEEngine``."""
-from .ops import certify, pallas_columns
+from .drift import (DEFAULT_BAND, DRIFT_ENV_VAR, BandedSelection,
+                    DriftBandError, banded_winner_rows, certify_banded_rows,
+                    drift_band)
+from .ops import certify, certify_f32, pallas_columns, pallas_columns_f32
 
-__all__ = ["certify", "pallas_columns"]
+__all__ = ["certify", "certify_f32", "pallas_columns", "pallas_columns_f32",
+           "banded_winner_rows", "certify_banded_rows", "drift_band",
+           "BandedSelection", "DriftBandError", "DEFAULT_BAND",
+           "DRIFT_ENV_VAR"]

@@ -31,9 +31,28 @@ With both in place the kernel is bit-identical to numpy and hence to
 ``tools/check_pricing_backend.py`` (``DFMODEL_PRICING_BACKEND=pallas``)
 enforces it end-to-end against the serial sweep in CI.
 
-A compiled TPU lowering would drop to float32 tiles of (8, 128) and leave
-the certified envelope — a deliberate non-goal here; interpret mode is
-the contract, the lowering is the scaling path for 10⁵-candidate grids.
+Numerics contract (the compiled f32 lowering)
+---------------------------------------------
+The compiled path (``run_columns_f32`` / the ``pallas-compiled`` backend)
+deliberately leaves the certified envelope: float32 tiles of
+(8, 128) — the flat candidate axis reshaped into sublane × lane blocks —
+with the ragged tail masked to zero through a shipped validity column
+instead of neutral-row padding, and NO opt-level-0 / barrier pinning (the
+whole point is letting the compiler fuse). Its outputs carry bounded
+relative drift vs the f64 envelope instead of bit-identity, and every
+consumer must route *decisions* through the drift-budget contract in
+:mod:`repro.kernels.pricing.drift`: winners are selected by exactly
+re-pricing (f64, numpy-reference arithmetic) every candidate whose f32
+iter-time lands within the declared band of the f32 argmin — plus every
+feasibility-ambiguous candidate at the capacity boundary — so compiled
+winners are provably identical to the scalar reference, and any observed
+drift beyond the declared band raises. ``drift.py`` holds the band
+(``DFMODEL_DRIFT_BAND``, default ``1e-5``), the banded selection, and the
+certification helpers; ``ops.certify_f32`` proves the drift bound on
+seeded random vectors. On CPU (no compiled pallas lowering in this jax
+version) the kernel runs as an interpret-mode f32 twin — same tiling,
+same masking, same dtype — so the numerics are testable anywhere;
+``interpret="auto"`` switches to real compilation on an accelerator.
 """
 from __future__ import annotations
 
@@ -49,6 +68,22 @@ from jax.experimental import pallas as pl
 #: Candidates per grid step. Large enough to amortize interpret-mode
 #: dispatch, small enough that a tile of ~26 float64 columns stays resident.
 DEFAULT_TILE = 512
+
+#: The compiled f32 tile: 8 sublanes × 128 lanes — the native float32
+#: vreg tiling — so one grid step prices 1024 candidates.
+F32_SUBLANES = 8
+F32_LANES = 128
+F32_BLOCK = F32_SUBLANES * F32_LANES
+
+
+def padded_length(n: int, tile: int = DEFAULT_TILE) -> int:
+    """Pad ``n`` to a tile multiple, then bucket to a power-of-two tile
+    count, so a sweep of ragged batch sizes shares O(log) cached
+    executables instead of minting one per distinct padded length.
+    Every batch ≤ ``tile`` lands in one tile; beyond that the pad never
+    exceeds 2× the batch."""
+    tiles = max(1, math.ceil(n / tile))
+    return tile * (1 << (tiles - 1).bit_length())
 
 
 def _unwrap(x):
@@ -149,13 +184,14 @@ def run_columns(formula, cols, out_names, tile: int = DEFAULT_TILE,
     the batch axis (the :mod:`repro.core.pricing` contract). Columns are
     padded to a tile multiple with neutral 1.0 rows (every pricing
     denominator stays non-zero) and the pad is sliced off the outputs.
-    The tile is *not* shrunk to the batch: every batch ≤ ``tile`` pads to
-    one tile and shares a single cached executable instead of triggering
-    a per-length recompile.
+    The tile is *not* shrunk to the batch, and padded lengths are
+    bucketed to powers of two above the tile (:func:`padded_length`), so
+    a sweep of ragged batch sizes shares O(log) cached executables
+    instead of triggering a per-length recompile.
     """
     in_names = tuple(cols)
     n = len(next(iter(cols.values())))
-    padded = math.ceil(n / tile) * tile
+    padded = padded_length(n, tile)
     with enable_x64():
         compiled = _compiled_call(formula, in_names, tuple(out_names),
                                   padded, tile, interpret)
@@ -165,3 +201,83 @@ def run_columns(formula, cols, out_names, tile: int = DEFAULT_TILE,
         outs = compiled(*ins)
         return {name: np.asarray(out)[:n]
                 for name, out in zip(out_names, outs)}
+
+
+# --- the compiled f32 lowering (see "Numerics contract" above) ---------------
+def _columns_kernel_f32(*refs, formula, in_names, out_names):
+    """One grid step: price an (8, 128) candidate tile in float32.
+
+    ``refs[0]`` is the validity tile (1.0 on real candidate rows, 0.0 on
+    the ragged tail) — masking through a shipped column instead of a
+    baked-in batch length keeps the executable cacheable across every
+    batch that buckets to the same padded length."""
+    valid = refs[0][...] != 0.0
+    cols = {name: ref[...] for name, ref in zip(in_names, refs[1:])}
+    out = formula(jnp, cols)
+    for name, ref in zip(out_names, refs[1 + len(in_names):]):
+        # bool outputs (the capacity check) travel as 0.0/1.0 float32
+        ref[...] = jnp.where(valid, out[name].astype(jnp.float32),
+                             jnp.float32(0.0))
+
+
+@functools.lru_cache(maxsize=64)
+def _compiled_call_f32(formula, in_names: tuple[str, ...],
+                       out_names: tuple[str, ...], padded: int,
+                       interpret: bool):
+    """The jitted 2D-tiled pallas call. No opt-level-0 pin, no barriers —
+    the compiled path trades bit-identity for speed and settles its
+    numerics through the drift-budget contract instead. Cached per
+    (formula, column layout, bucketed padded length)."""
+    kernel = functools.partial(_columns_kernel_f32, formula=formula,
+                               in_names=in_names, out_names=out_names)
+    rows = padded // F32_LANES
+    spec = pl.BlockSpec((F32_SUBLANES, F32_LANES), lambda i: (i, 0))
+    return jax.jit(pl.pallas_call(
+        kernel,
+        grid=(rows // F32_SUBLANES,),
+        in_specs=[spec] * (1 + len(in_names)),
+        out_specs=[spec] * len(out_names),
+        out_shape=[jax.ShapeDtypeStruct((rows, F32_LANES), jnp.float32)
+                   for _ in out_names],
+        interpret=interpret,
+    ))
+
+
+def run_columns_f32(formula, cols, out_names,
+                    interpret: bool | str = "auto"
+                    ) -> dict[str, np.ndarray]:
+    """Run an elementwise column formula as the compiled f32 kernel.
+
+    The flat candidate axis is padded to a power-of-two multiple of
+    :data:`F32_BLOCK` (:func:`padded_length`) and reshaped into
+    (sublane-rows, 128) blocks; one grid step prices an (8, 128) tile.
+    The ragged tail is masked to zero inside the kernel via a shipped
+    validity column — no neutral-row padding, so pad rows cost nothing
+    and garbage in them can never leak into real outputs.
+
+    ``interpret="auto"`` runs the real (non-interpret) lowering on an
+    accelerator backend and the interpret-mode f32 twin on CPU — same
+    tiling, masking and dtype, so the drift contract is testable without
+    hardware. Outputs are float32 (:mod:`.drift` re-prices decisions
+    exactly; see the module docstring's numerics contract).
+    """
+    in_names = tuple(cols)
+    n = len(next(iter(cols.values())))
+    padded = padded_length(n, F32_BLOCK)
+    rows = padded // F32_LANES
+    if interpret == "auto":
+        interpret = jax.default_backend() == "cpu"
+    call = _compiled_call_f32(formula, in_names, tuple(out_names), padded,
+                              bool(interpret))
+
+    def block(col: np.ndarray) -> jnp.ndarray:
+        flat = np.pad(np.asarray(col, dtype=np.float32), (0, padded - n))
+        return jnp.asarray(flat.reshape(rows, F32_LANES))
+
+    valid = np.zeros(padded, dtype=np.float32)
+    valid[:n] = 1.0
+    ins = [jnp.asarray(valid.reshape(rows, F32_LANES))]
+    ins += [block(cols[name]) for name in in_names]
+    outs = call(*ins)
+    return {name: np.asarray(out).reshape(-1)[:n]
+            for name, out in zip(out_names, outs)}

@@ -16,7 +16,7 @@ Public surface:
   harvest feeding plan-level surrogates (the ROADMAP's
   learned-cost-model stepping stone).
 """
-from .grid import DenseGridSpec, scaled_name
+from .grid import DenseGridSpec, ScaledWorkFn, scale_lattice, scaled_name
 from .policy import (Observation, RandomSearch, SearchContext, SearchPolicy,
                      SearchResult, SuccessiveHalving)
 from .surrogate import (PLAN_FEATURE_FIELDS, RidgeModel, SurrogateSearch,
@@ -25,6 +25,8 @@ from .surrogate import (PLAN_FEATURE_FIELDS, RidgeModel, SurrogateSearch,
 __all__ = [
     "DenseGridSpec",
     "Observation",
+    "ScaledWorkFn",
+    "scale_lattice",
     "PLAN_FEATURE_FIELDS",
     "RandomSearch",
     "RidgeModel",

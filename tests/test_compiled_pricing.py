@@ -1,0 +1,326 @@
+"""Compiled f32 pricing backend + drift-budget contract tests.
+
+The house rule under test: ``pallas-compiled`` may price the candidate
+mass in float32, but every *decision* made from its columns must be
+provably identical to the f64 scalar reference. The layers:
+
+* kernel — ``certify_f32`` holds the declared relative band on seeded
+  random plan vectors; padded lengths bucket to powers of two above the
+  tile; the one-row output probe memoizes per (formula, layout).
+* banded selection — ``banded_winner_rows`` reproduces the serial scan
+  on exact-duplicate iter-times, on adversarial pairs engineered to tie
+  in f32 but order in f64, and on capacities sitting inside the band of
+  the memory footprint; observed drift beyond the band raises
+  ``DriftBandError`` instead of returning a selection.
+* core — ``select_plans`` on the compiled backend returns the numpy
+  reference's plans with exact feasibility bits; unknown backend
+  spellings raise.
+* engine — sweeps on both sides of the IPC boundary (serial in-process
+  and the forced process pool) emit rows bit-identical to the numpy
+  engine, and ``reprice_grid`` certifies whole dense grids in bounded
+  chunks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.core import DSEEngine, SweepSpec, clear_caches
+from repro.core.dse import build_system
+from repro.core.interchip import (candidate_matrix, scalar_winner_rows,
+                                  select_plans)
+from repro.core.pricing import (PlanVector, exact_backend, is_approx_backend,
+                                price_plans, resolve_backend, stack_plans)
+from repro.kernels.pricing import (DEFAULT_BAND, DriftBandError,
+                                   banded_winner_rows, certify_banded_rows,
+                                   certify_f32, drift_band)
+from repro.kernels.pricing.kernel import DEFAULT_TILE, F32_BLOCK, padded_length
+from repro.kernels.pricing.ops import _probe_outputs, pallas_columns
+from repro.search.grid import DenseGridSpec, ScaledWorkFn, scale_lattice
+from repro.workloads.llm import LLAMA_68M, gpt_workload
+
+
+# module-level so the workload builder is picklable under spawn semantics
+def _tiny_work(system):
+    return gpt_workload(LLAMA_68M, global_batch=64, microbatch=1)
+
+
+SMOKE_SPEC = SweepSpec(n_chips=16, chips=("H100", "SN30"),
+                       topologies=("torus2d", "dgx2"),
+                       mem_net=(("DDR", "PCIe"), ("HBM", "NVLink")),
+                       max_tp=16)
+
+
+def _engine(**kwargs) -> DSEEngine:
+    env_ctx = os.environ.get("DFMODEL_TEST_MP_CONTEXT")
+    if env_ctx:
+        kwargs.setdefault("mp_context", env_ctx)
+    kwargs.setdefault("parallel", False)
+    return DSEEngine(**kwargs)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_caches():
+    clear_caches()
+    yield
+    clear_caches()
+
+
+def _vec(t_comp: float, mem: float = 8e9, cap: float = 1e12) -> PlanVector:
+    """A plan vector whose iter_time is exactly ``t_comp`` and whose
+    per-chip memory is exactly ``mem`` (pp=1, n_micro=1, zero backward
+    multipliers and collectives collapse Eq. 7 to the forward stage)."""
+    return PlanVector(
+        t_comp_stage=t_comp, t_net_stage=0.0, t_p2p=0.0, t_dp=0.0,
+        n_micro=1.0, tp=1.0, pp=1.0, bwd_flop_mult=0.0, bwd_comm_mult=0.0,
+        opt_mult=0.0, model_flops=1e12, weight_bytes=mem,
+        act_bytes_layer=0.0, layers_per_stage=1.0, stage_layers=1.0,
+        n_chips=8.0, chip_peak=1e12, mem_capacity=cap,
+        sys_peak_flops=8e12, sys_price=1e6, sys_power=1e4,
+        intra_comp=0.0, intra_mem=0.0, intra_net=0.0, intra_total=0.0)
+
+
+def _banded_vs_scalar(vectors, capacities, band=None):
+    """Run the banded selection over compiled-f32 pricing and assert it
+    reproduces the literal serial scan; returns the selection."""
+    cols = stack_plans(vectors)
+    f32 = price_plans(cols, backend="pallas-compiled")
+    ref = price_plans(cols, backend="numpy")
+    expected = scalar_winner_rows(ref["iter_time"].tolist(),
+                                  ref["per_chip_mem_bytes"].tolist(),
+                                  capacities)
+    return certify_banded_rows(cols, f32, capacities, expected,
+                               "pallas-compiled", band=band)
+
+
+# --- kernel layer -------------------------------------------------------------
+def test_certify_f32_within_band():
+    report = certify_f32(512, seed=3)
+    assert report["within_band"] is True
+    assert report["band"] == DEFAULT_BAND
+    assert 0.0 < report["max_drift"] <= DEFAULT_BAND
+    assert "iter_time" in report["drift_by_column"]
+
+
+def test_padded_length_buckets_to_powers_of_two():
+    assert padded_length(0) == DEFAULT_TILE
+    assert padded_length(1) == DEFAULT_TILE
+    assert padded_length(DEFAULT_TILE) == DEFAULT_TILE
+    assert padded_length(DEFAULT_TILE + 1) == 2 * DEFAULT_TILE
+    assert padded_length(5 * DEFAULT_TILE) == 8 * DEFAULT_TILE
+    # the f32 block is the tile for the compiled layout
+    assert padded_length(F32_BLOCK + 1, F32_BLOCK) == 2 * F32_BLOCK
+    # bucketed: O(log n) distinct executables across any batch-size mix
+    sizes = {padded_length(n) for n in range(1, 4097)}
+    assert sizes == {DEFAULT_TILE * (1 << k) for k in range(4)}
+
+
+def test_probe_outputs_memoized():
+    probes = []
+
+    def formula(xp, cols):
+        if xp is np:
+            probes.append(int(len(cols["x"])))
+        return {"y": cols["x"] * 2.0, "big": cols["x"] > 1.0}
+
+    _probe_outputs.cache_clear()
+    for _ in range(3):
+        out = pallas_columns(formula, {"x": np.arange(5.0)})
+    assert out["big"].dtype == np.bool_
+    # the one-row probe ran exactly once across three dispatches
+    assert probes == [1]
+
+
+# --- banded selection ---------------------------------------------------------
+def test_exact_duplicate_iter_times_pick_first_index():
+    # four tiled copies of the same two-row pattern: every minimum is
+    # duplicated, so any tie-break other than first-index diverges
+    vectors = [_vec(2.0), _vec(1.0)] * 4
+    sel = _banded_vs_scalar(vectors, [1e12, 5e9])
+    assert sel.rows == [1, 1]
+
+
+def test_f32_rounding_tie_resolved_by_exact_repricing():
+    # a < b in f64 but float32(a) == float32(b); the larger value sits at
+    # the LOWER index, so an f32-only argmin would pick row 0 — the band
+    # re-prices both rows exactly and must land on row 1
+    a, b = 1.0, 1.0 + 1e-9
+    assert np.float32(a) == np.float32(b)
+    vectors = [_vec(b), _vec(a), _vec(3.0)]
+    sel = _banded_vs_scalar(vectors, [1e12])
+    assert sel.rows == [1]
+    assert sel.stats["band_hits"] >= 2          # both tied rows re-priced
+    assert sel.winner_iter == [a]               # exact f64 value, not f32
+
+
+def test_capacity_inside_band_resolved_exactly():
+    # both rows' memory sits within f32 drift of the capacity: feasibility
+    # is ambiguous in f32 and must be settled by exact re-pricing on both
+    # sides of the boundary
+    cap = float(2 ** 40) + 3.0
+    vectors = [_vec(1.0, mem=cap + 1.0),       # faster but infeasible
+               _vec(2.0, mem=cap - 1.0)]       # slower, feasible winner
+    sel = _banded_vs_scalar(vectors, [cap])
+    assert sel.rows == [1]
+    assert sel.stats["ambiguous_mem"] == 2
+    assert sel.winner_mem == [cap - 1.0]
+    # and when nothing fits, the reference falls back to the global argmin
+    sel2 = _banded_vs_scalar(vectors, [1.0])
+    assert sel2.rows == [0]
+    assert sel2.stats["fallback_caps"] == 1
+
+
+def test_drift_beyond_band_raises():
+    vectors = [_vec(1.0), _vec(2.0)]
+    cols = stack_plans(vectors)
+    ref = price_plans(cols, backend="numpy")
+    corrupted = {"iter_time": ref["iter_time"] * 1.1,
+                 "per_chip_mem_bytes": ref["per_chip_mem_bytes"]}
+    with pytest.raises(DriftBandError, match="beyond the declared band"):
+        banded_winner_rows(cols, corrupted, [1e12])
+
+
+def test_winner_mismatch_raises():
+    vectors = [_vec(1.0), _vec(2.0)]
+    cols = stack_plans(vectors)
+    f32 = price_plans(cols, backend="pallas-compiled")
+    with pytest.raises(RuntimeError, match="different candidates"):
+        certify_banded_rows(cols, f32, [1e12], [1], "pallas-compiled")
+
+
+def test_drift_band_env_validation(monkeypatch):
+    monkeypatch.delenv("DFMODEL_DRIFT_BAND", raising=False)
+    assert drift_band() == DEFAULT_BAND
+    monkeypatch.setenv("DFMODEL_DRIFT_BAND", "1e-6")
+    assert drift_band() == 1e-6
+    for bad in ("banana", "0.7", "-1e-3", "0", "inf", "nan"):
+        monkeypatch.setenv("DFMODEL_DRIFT_BAND", bad)
+        with pytest.raises(ValueError, match="DFMODEL_DRIFT_BAND"):
+            drift_band()
+
+
+# --- core backend plumbing ----------------------------------------------------
+def test_backend_helpers_and_unknown_spelling():
+    assert resolve_backend("pallas-compiled") == "pallas-compiled"
+    assert is_approx_backend("pallas-compiled") is True
+    assert is_approx_backend("pallas") is False
+    assert exact_backend("pallas-compiled") == "numpy"
+    assert exact_backend("jax") == "jax"
+    with pytest.raises(ValueError, match="unknown pricing backend"):
+        resolve_backend("pallas-compiled-f16")
+    with pytest.raises(ValueError, match="unknown pricing backend"):
+        price_plans(stack_plans([_vec(1.0)]), backend="compiled")
+
+
+def test_select_plans_compiled_matches_numpy():
+    system = build_system(("H100", "HBM", "NVLink", "torus2d"), 16)
+    cands = candidate_matrix(_tiny_work(system), system, max_tp=16)
+    assert len(cands) > 1
+    mems = sorted(cands.selection()["per_chip_mem_bytes"].tolist())
+    # capacities straddling the candidate spread, including one between
+    # two footprints and one below all of them (fallback semantics)
+    caps = [mems[-1] * 2.0, (mems[0] + mems[-1]) / 2.0, mems[0] * 0.5]
+    want = select_plans(cands, caps, backend="numpy")
+    got = select_plans(cands, caps, backend="pallas-compiled")
+    for w, g in zip(want, got):
+        assert (w.tp, w.pp, w.dp) == (g.tp, g.pp, g.dp)
+        assert w.iter_time == g.iter_time
+        assert w.feasible == g.feasible
+
+
+# --- engine: both sides of the IPC boundary -----------------------------------
+def test_engine_rows_identical_serial_and_pool():
+    rows_ref = [p.row() for p in
+                _engine(pricing_backend="numpy").sweep(_tiny_work,
+                                                       SMOKE_SPEC)]
+    assert rows_ref
+    serial = _engine(pricing_backend="pallas-compiled")
+    rows_serial = [p.row() for p in serial.sweep(_tiny_work, SMOKE_SPEC)]
+    assert rows_serial == rows_ref
+    drift = serial.last_drift_stats
+    assert drift is not None and drift["backend"] == "pallas-compiled"
+    assert drift["max_iter_drift"] <= drift["band"]
+
+    pool = _engine(parallel=True, max_workers=2,
+                   pricing_backend="pallas-compiled", price_chunk_rows=64)
+    rows_pool = [p.row() for p in pool.sweep(_tiny_work, SMOKE_SPEC)]
+    assert rows_pool == rows_ref
+    drift = pool.last_drift_stats
+    assert drift is not None and drift["groups"] > 0
+    assert drift["rows"] == pool.last_plan_stats["priced"]
+
+
+def test_engine_rejects_bad_chunk_rows():
+    with pytest.raises(ValueError, match="price_chunk_rows"):
+        DSEEngine(price_chunk_rows=0)
+    eng = _engine(pricing_backend="numpy")
+    with pytest.raises(ValueError, match="chunk_rows"):
+        eng.reprice_grid(_tiny_work, SMOKE_SPEC, chunk_rows=-1)
+
+
+# --- reprice_grid + dense grids ----------------------------------------------
+def _tiny_dense() -> DenseGridSpec:
+    return DenseGridSpec(n_chips=16, base_chips=("H100",),
+                         chip_scales=(1.0, 1.25),
+                         base_memories=("DDR", "HBM"),
+                         memory_scales=(0.75, 1.0),
+                         base_nets=("PCIe",), net_scales=(1.0,),
+                         topologies=("torus2d",))
+
+
+def test_reprice_grid_certifies_dense_grid():
+    spec = _tiny_dense().spec()
+    eng = _engine(pricing_backend="pallas-compiled", price_chunk_rows=256)
+    rep = eng.reprice_grid(_tiny_work, spec)
+    assert rep["winners_identical"] is True
+    assert rep["cells"] == _tiny_dense().n_cells() == len(spec.grid())
+    assert rep["priced_rows"] > 0 and rep["chunks"] >= 1
+    assert rep["drift"] is not None
+    assert rep["drift"]["max_iter_drift"] <= rep["drift"]["band"]
+    assert 0.0 <= rep["repriced_frac"] <= 1.0
+    # exact backends run the same harness with bit-identity certification
+    rep_np = _engine(pricing_backend="numpy").reprice_grid(_tiny_work, spec)
+    assert rep_np["winners_identical"] is True and rep_np["drift"] is None
+    assert rep_np["priced_rows"] == rep["priced_rows"]
+
+
+def test_dense_sizing_reaches_target_cells():
+    d5 = DenseGridSpec.dense(100_000)
+    assert d5.n_cells() >= 100_000
+    assert len(set(d5.memory_scales)) == len(d5.memory_scales)
+    scales = tuple(0.25 * (i + 1) for i in range(10))
+    d6 = DenseGridSpec.dense(100_000, workload_scales=scales)
+    assert d6.n_total_cells() >= 1_000_000
+    assert len(d6.work_variants(_tiny_work)) == len(scales)
+
+
+def test_scale_lattice_validation():
+    assert scale_lattice(0.5, 2.0, 1) == (0.5,)
+    lattice = scale_lattice(0.5, 2.0, 7)
+    assert len(lattice) == 7 and lattice[0] == 0.5 and lattice[-1] == 2.0
+    with pytest.raises(ValueError, match="lattice"):
+        scale_lattice(0.5, 2.0, 0)
+    with pytest.raises(ValueError, match="collapses"):
+        scale_lattice(1.0, 1.0 + 1e-9, 5)
+
+
+def test_scaled_work_fn_picklable_and_scales_batch():
+    wf = ScaledWorkFn(_tiny_work, 2.0)
+    system = build_system(("H100", "HBM", "NVLink", "torus2d"), 16)
+    work = wf(system)
+    base = _tiny_work(system)
+    assert work.global_batch == 2 * base.global_batch
+    assert work.name == f"{base.name}@b2"
+    clone = pickle.loads(pickle.dumps(wf))(system)
+    # graph objects compare by identity across pickling; the scaled
+    # scalars are the contract
+    assert (clone.name, clone.global_batch, clone.microbatch) == (
+        work.name, work.global_batch, work.microbatch)
+    # identity scale passes the workload through untouched
+    unscaled = ScaledWorkFn(_tiny_work, 1.0)(system)
+    assert (unscaled.name, unscaled.global_batch) == (base.name,
+                                                      base.global_batch)

@@ -416,11 +416,13 @@ def test_pricing_backend_env_unknown_raises(monkeypatch, bad):
 def test_pricing_backend_env_known_spellings(monkeypatch):
     monkeypatch.delenv("DFMODEL_PRICING_BACKEND", raising=False)
     assert default_backend() == "numpy"
-    for backend in ("numpy", "jax", "pallas"):
+    for backend in ("numpy", "jax", "pallas", "pallas-compiled"):
         monkeypatch.setenv("DFMODEL_PRICING_BACKEND", backend)
         assert default_backend() == backend
     monkeypatch.setenv("DFMODEL_PRICING_BACKEND", "NumPy")
     assert default_backend() == "numpy"
+    monkeypatch.setenv("DFMODEL_PRICING_BACKEND", "Pallas-Compiled")
+    assert default_backend() == "pallas-compiled"
 
 
 # --- start-method auto-pick (fork-after-jax fix) -----------------------------

@@ -30,6 +30,16 @@ Runs the smoke `speedup_report` (the same measurement `benchmarks.run
   ≤ $DFMODEL_BENCH_SEARCH_MAX_FRAC of exhaustive evaluations (default
   0.2 — the paper-scale sweep replaced by a budgeted search) at no less
   than `baseline / $DFMODEL_BENCH_SLOWDOWN` search points/sec;
+* **compiled f32 pricing** — the report's `compiled` block (present
+  whenever jax is importable, like the other jax legs) must show
+  `winners_identical` true across every smoke scenario AND the dense
+  grid (the drift-budget contract: banded f32 selection + exact f64
+  re-pricing provably reproduces the scalar reference), the grid sized
+  at ≥ $DFMODEL_BENCH_GRID_MIN_CELLS cells (default 100000), the
+  exact-re-price fraction at ≤ $DFMODEL_BENCH_REPRICED_FRAC (default
+  0.5 — the band is supposed to *bound* the exact work, not hide it),
+  and the grid cells/sec + streamed kernel rows/sec above their
+  baseline-over-slowdown floors;
 * **candidate pruning** — the report's `prune` block must show the
   pruning stage enabled with `winners_identical` true (the prune-on
   engine's DesignPoint rows reproduce the prune-off engine's
@@ -111,12 +121,67 @@ def _check_search_entry(problems: list[str], label: str, entry: dict,
             f"limit {slowdown:g})")
 
 
+def _check_compiled(problems: list[str], fresh: dict, base: dict,
+                    slowdown: float, grid_min_cells: int,
+                    repriced_max_frac: float) -> None:
+    """The drift-budget contract gate for the `compiled` report block."""
+    entry = fresh.get("compiled")
+    base_entry = base.get("compiled") or {}
+    if not entry:
+        problems.append("compiled block missing: the f32 pricing "
+                        "benchmark did not run")
+        return
+    if not entry.get("available", False):
+        # a jax-less interpreter can't run the backend at all — only a
+        # regression if the committed baseline DID have it available
+        if base_entry.get("available", False):
+            problems.append("compiled.available is False but the baseline "
+                            "ran the f32 backend: jax import regressed")
+        return
+    if not entry.get("winners_identical", False):
+        bad = [name for name, e in (entry.get("smoke") or {}).items()
+               if not e.get("winners_identical", False)]
+        where = f" (smoke scenarios: {', '.join(bad)})" if bad else " (grid)"
+        problems.append(f"compiled.winners_identical is False{where}: the "
+                        f"drift-banded f32 selection no longer reproduces "
+                        f"the f64 scalar reference")
+    grid = entry.get("grid") or {}
+    if grid.get("cells", 0) < grid_min_cells:
+        problems.append(
+            f"compiled grid certified only {grid.get('cells', 0)} cells "
+            f"< floor {grid_min_cells}")
+    frac = grid.get("repriced_frac", 1.0)
+    if frac > repriced_max_frac:
+        problems.append(
+            f"compiled grid re-priced {frac:.3f} of candidate rows "
+            f"exactly > ceiling {repriced_max_frac:g}: the drift band no "
+            f"longer bounds the exact-pricing fallback")
+    base_grid = base_entry.get("grid") or {}
+    floor = base_grid.get("cells_per_s", 0.0) / slowdown
+    if grid.get("cells_per_s", 0.0) < floor:
+        problems.append(
+            f"compiled grid {grid.get('cells_per_s', 0.0):.1f} cells/s < "
+            f"{floor:.1f} (baseline {base_grid.get('cells_per_s', 0.0):.1f}"
+            f" / slowdown limit {slowdown:g})")
+    stream = entry.get("stream") or {}
+    base_stream = base_entry.get("stream") or {}
+    floor = base_stream.get("rows_per_s", 0.0) / slowdown
+    if stream.get("rows_per_s", 0.0) < floor:
+        problems.append(
+            f"compiled stream {stream.get('rows_per_s', 0.0):.1f} rows/s "
+            f"< {floor:.1f} (baseline "
+            f"{base_stream.get('rows_per_s', 0.0):.1f} / slowdown limit "
+            f"{slowdown:g})")
+
+
 def compare(fresh: dict, base: dict,
             slowdown: float, min_speedup: float,
             hit_drop: float, shared_min_hits: int = 1,
             shared_min_rate: float = 0.002,
             prune_slack: float = 1.5,
-            search_max_frac: float = 0.2) -> list[str]:
+            search_max_frac: float = 0.2,
+            grid_min_cells: int = 100_000,
+            repriced_max_frac: float = 0.5) -> list[str]:
     """Return a list of human-readable regression messages (empty = pass)."""
     problems: list[str] = []
     if not fresh.get("rows_identical", False):
@@ -220,6 +285,9 @@ def compare(fresh: dict, base: dict,
                 problems.append(
                     f"search:dense spent {frac:.3f} of exhaustive "
                     f"evaluations > cap {search_max_frac:g}")
+    # the compiled f32 drift-budget contract block
+    _check_compiled(problems, fresh, base, slowdown, grid_min_cells,
+                    repriced_max_frac)
     return problems
 
 
@@ -245,6 +313,10 @@ def main() -> int:
     prune_slack = float(os.environ.get("DFMODEL_BENCH_PRUNE_SLACK", "1.5"))
     search_max_frac = float(os.environ.get("DFMODEL_BENCH_SEARCH_MAX_FRAC",
                                            "0.2"))
+    grid_min_cells = int(os.environ.get("DFMODEL_BENCH_GRID_MIN_CELLS",
+                                        "100000"))
+    repriced_max_frac = float(os.environ.get("DFMODEL_BENCH_REPRICED_FRAC",
+                                             "0.5"))
 
     fresh = _fresh_report(args.fresh_out)
     if args.update:
@@ -262,7 +334,9 @@ def main() -> int:
                        shared_min_hits=shared_min_hits,
                        shared_min_rate=shared_min_rate,
                        prune_slack=prune_slack,
-                       search_max_frac=search_max_frac)
+                       search_max_frac=search_max_frac,
+                       grid_min_cells=grid_min_cells,
+                       repriced_max_frac=repriced_max_frac)
     for path, vals in fresh.get("paths", {}).items():
         print(f"  {path:20s} {vals['points_per_s']:10.1f} points/s "
               f"(baseline "
@@ -288,6 +362,18 @@ def main() -> int:
           f"{dense.get('grid_points', 0)} evals "
           f"(frac {dense.get('eval_frac', 1.0):.3f}), certified: "
           f"{dense.get('winner_identical', False)}")
+    compiled = fresh.get("compiled") or {}
+    if compiled.get("available"):
+        cgrid = compiled.get("grid") or {}
+        cstream = compiled.get("stream") or {}
+        print(f"  compiled: {len(compiled.get('smoke') or {})} smoke "
+              f"scenarios + {cgrid.get('cells', 0)} grid cells, winners "
+              f"identical: {compiled.get('winners_identical', False)}, "
+              f"repriced frac {cgrid.get('repriced_frac', 0.0):.3f}, "
+              f"{cgrid.get('cells_per_s', 0.0):.0f} cells/s, stream "
+              f"{cstream.get('rows_per_s', 0.0):.0f} rows/s")
+    else:
+        print("  compiled: unavailable (no jax)")
     if problems:
         print("bench gate: REGRESSION", file=sys.stderr)
         for p in problems:

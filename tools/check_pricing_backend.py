@@ -1,20 +1,26 @@
 """CI gate: the phased smoke sweep must reproduce the scalar reference
 bit-for-bit on the pricing backend named by $DFMODEL_PRICING_BACKEND
-(jax / pallas skip gracefully when the container lacks jax).
+(jax / pallas / pallas-compiled skip gracefully when the container
+lacks jax).
 
   PYTHONPATH=src DFMODEL_PRICING_BACKEND=jax python tools/check_pricing_backend.py
   PYTHONPATH=src DFMODEL_PRICING_BACKEND=pallas python tools/check_pricing_backend.py
+  PYTHONPATH=src DFMODEL_PRICING_BACKEND=pallas-compiled python tools/check_pricing_backend.py
 
 For the pallas backend the kernel package's own certification harness
 (`repro.kernels.pricing.certify` — row-identity of the interpret-mode
 kernel against the float64 scalar reference) runs first, then the same
-end-to-end sweep comparison the other backends get.
+end-to-end sweep comparison the other backends get. For pallas-compiled
+the f32 twin (`certify_f32` — outputs within the declared drift band of
+the f64 reference) runs instead; the end-to-end sweep then proves the
+drift-budget contract: banded f32 selection + exact f64 re-pricing
+reproduces the scalar winners bit-for-bit.
 """
 import os
 import sys
 
 backend = os.environ.get("DFMODEL_PRICING_BACKEND", "numpy")
-if backend in ("jax", "pallas"):
+if backend in ("jax", "pallas", "pallas-compiled"):
     try:
         import jax  # noqa: F401
     except Exception:
@@ -32,6 +38,11 @@ def main() -> None:
 
         report = certify(n=512, seed=0)
         print(f"pallas pricing kernel certification: {report}")
+    elif backend == "pallas-compiled":
+        from repro.kernels.pricing import certify_f32
+
+        report = certify_f32(n=512, seed=0)
+        print(f"compiled f32 pricing kernel certification: {report}")
     sc = get_scenario("llm", smoke=True)
     s = sc.spec
     clear_caches()
@@ -46,6 +57,12 @@ def main() -> None:
     print(f"pricing backend {backend}: {len(pts)} points, rows identical OK "
           f"(pruned {st.get('enumerated', 0)} -> {st.get('priced', 0)} "
           f"candidate rows)")
+    drift = engine.last_drift_stats
+    if drift is not None:
+        print(f"drift contract: band {drift['band']:g}, "
+              f"{drift['repriced']}/{drift['rows']} rows exactly re-priced, "
+              f"max iter drift {drift['max_iter_drift']:.3g}, "
+              f"max mem drift {drift['max_mem_drift']:.3g}")
 
 
 if __name__ == "__main__":

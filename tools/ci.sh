@@ -71,11 +71,14 @@ fi
 gate "smoke benchmarks" env PYTHONPATH=src python -m benchmarks.run --smoke
 
 # pricing backends: the phased smoke sweep must reproduce the scalar
-# reference bit-for-bit on every batched backend. The jax and pallas legs
-# need jax; skip them HERE with an explicit line (rather than relying on
-# the checker's internal skip) so offline-container logs are unambiguous.
+# reference bit-for-bit on every batched backend — including the
+# approximate pallas-compiled f32 backend, whose drift-budget contract
+# (banded selection + exact f64 re-pricing) makes bit-identity hold
+# there too. The jax-family legs need jax; skip them HERE with an
+# explicit line (rather than relying on the checker's internal skip) so
+# offline-container logs are unambiguous.
 if python -c "import jax" >/dev/null 2>&1; then HAVE_JAX=1; else HAVE_JAX=0; fi
-for backend in numpy jax pallas; do
+for backend in numpy jax pallas pallas-compiled; do
     if [[ "$backend" != numpy && "$HAVE_JAX" == 0 ]]; then
         echo "pricing backend $backend: SKIP (no jax)"
         continue
