@@ -253,6 +253,83 @@ def compiled_block(sc, spec) -> dict:
     }
 
 
+def service_block(scenario_name: str, smoke: bool) -> dict:
+    """The report's ``service`` block: the warm-daemon contract.
+
+    One fresh :class:`repro.service.DSEService` is measured through two
+    request phases:
+
+    * **cold** — daemon start (engine warm-up: worker pool + shared
+      store) plus TWO concurrent clients sweeping overlapping
+      two-thirds grids that together cover the whole grid. The memo is
+      empty, so every ``dedup_hit`` here is genuinely *cross-client*:
+      a shared cell priced once by the scheduler and streamed to both.
+      ``cold_request_s`` is the whole phase — what pricing the grid
+      costs without a resident daemon.
+    * **warm** — one client repeats the full-grid sweep against the
+      now-warm daemon; every row is served from the shared memo with
+      zero new prices. ``warm_speedup = cold_request_s /
+      warm_request_s`` and ``rows_per_s`` is the warm streaming rate.
+
+    ``winners_identical`` compares the warm sweep's full row list to a
+    direct ``DSEEngine.sweep`` — the multiplexing layer must not
+    perturb a single bit. ``tools/check_bench.py`` gates the speedup
+    ($DFMODEL_BENCH_SERVICE_MIN_SPEEDUP), the cross-client dedup count
+    ($DFMODEL_BENCH_SERVICE_MIN_DEDUP), row identity, and the warm
+    rows/sec floor."""
+    import threading
+
+    from repro.service import DSEClient, DSEService
+
+    sc = get_scenario(scenario_name, smoke=smoke)
+    direct = [p.row() for p in DSEEngine(parallel=False).sweep(sc.work_fn,
+                                                               sc.spec)]
+    n = len(sc.spec.grid())
+    a_cells = list(range(0, 2 * n // 3))
+    b_cells = list(range(n // 3, n))
+
+    t0 = time.perf_counter()
+    svc = DSEService(batch_cells=8)
+    svc.start()
+    try:
+        def run(name, cells):
+            with DSEClient(svc.path) as cli:
+                cli.sweep(scenario=scenario_name, smoke=smoke, cells=cells,
+                          client=name)
+
+        threads = [threading.Thread(target=run, args=("A", a_cells)),
+                   threading.Thread(target=run, args=("B", b_cells))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        cold_s = time.perf_counter() - t0
+
+        with DSEClient(svc.path) as cli:
+            # snapshot before the warm repeat: dedup_hits here are the
+            # cross-client ones from the cold concurrent phase
+            sched = cli.stats()["scheduler"]
+            t0 = time.perf_counter()
+            rep = cli.sweep(scenario=scenario_name, smoke=smoke)
+            warm_s = time.perf_counter() - t0
+    finally:
+        svc.close()
+    return {
+        "grid_points": n,
+        "clients": 2,
+        "overlap_cells": len(set(a_cells) & set(b_cells)),
+        "cold_request_s": cold_s,
+        "warm_request_s": warm_s,
+        "warm_speedup": cold_s / warm_s if warm_s else float("inf"),
+        "rows_per_s": (rep.summary["rows"] / warm_s
+                       if warm_s else float("inf")),
+        "dedup_hits": sched["dedup_hits"],
+        "cells_priced": sched["cells_priced"],
+        "rows_streamed": sched["rows_streamed"],
+        "winners_identical": rep.rows() == direct,
+    }
+
+
 def _frontier_rows(name: str, result) -> list[dict]:
     return [{"workload": name, "pareto": True, **p.row()}
             for p in result.frontier]
@@ -351,6 +428,7 @@ def speedup_report(scenario_name: str = "llm", smoke: bool = True,
     shared_stats = shared.last_shared_stats
     search = search_block(sc, spec)
     compiled = compiled_block(sc, spec)
+    service = service_block(scenario_name, smoke)
 
     ref = rows_by_path["serial_uncached"]
     identical = all(rows == ref for rows in rows_by_path.values())
@@ -413,6 +491,10 @@ def speedup_report(scenario_name: str = "llm", smoke: bool = True,
         # the 10^5-cell dense grid certified group-by-group, plus the
         # raw chunk-streamed kernel throughput ceiling
         "compiled": compiled,
+        # the warm daemon: cold concurrent clients (cross-client dedup)
+        # vs a warm full-grid repeat served from the shared memo, rows
+        # bit-identical to a direct engine sweep
+        "service": service,
         "shared_cache": shared_stats,
         "cache": {"hits": stats.hits, "misses": stats.misses,
                   "entries": stats.entries,
@@ -456,6 +538,7 @@ def speedup_report(scenario_name: str = "llm", smoke: bool = True,
         out.append({"path": "compiled:stream", **compiled["stream"]})
     else:
         out.append({"path": "compiled", "available": False})
+    out.append({"path": "service", **service})
     out.extend(stats.rows())
     if shared_stats is not None:
         out.append({"space": "SHARED", "backend": shared_stats["backend"],

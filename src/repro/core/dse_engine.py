@@ -184,6 +184,12 @@ def _init_worker_shared(handle: StoreHandle) -> None:
     Finalize(None, client.close, exitpriority=10)
 
 
+def _noop(_i: int) -> None:
+    """Warm-up task for :meth:`DSEEngine.start` (module-level so every
+    start method can pickle it)."""
+    return None
+
+
 def _eval_index(i: int) -> DesignPoint | None:
     ctx = _WORKER_CTX
     return evaluate_design_point(ctx["work_fn"], ctx["grid"][i],
@@ -415,6 +421,11 @@ class DSEEngine:
         #: "band_hits", "fallback_caps", "max_iter_drift",
         #: "max_mem_drift"}), or ``None`` when no banded selection ran.
         self.last_drift_stats: dict | None = None
+        # warm-session state (:meth:`start` / :meth:`shutdown`): one
+        # process pool + one shared memo store reused across calls
+        self._session = False
+        self._session_pool = None
+        self._session_store = None
 
     # -- core sweep ----------------------------------------------------------
     def sweep(self, work_fn: Callable[[SystemSpec], TrainWorkload],
@@ -470,7 +481,32 @@ class DSEEngine:
         (one batch per plan group) — pricing is elementwise over the batch
         axis, so streamed values are bit-identical to a full sweep's.
         """
-        grid = spec.grid()
+        return self._iter_cells(work_fn, spec, spec.grid(), stop)
+
+    def sweep_cells_iter(self, work_fn: Callable[[SystemSpec], TrainWorkload],
+                         cells: Sequence[GridCell],
+                         spec: SweepSpec = SweepSpec(),
+                         stop: Callable[[SweepItem], bool] | None = None
+                         ) -> Iterator[SweepItem]:
+        """Stream :class:`SweepItem`\\ s for an explicit list of grid cells.
+
+        Identical machinery (and therefore bit-identical points) to
+        :meth:`sweep_iter`, but over ``cells`` instead of ``spec``'s own
+        cartesian grid — ``spec`` contributes only the non-grid sweep
+        parameters (``n_chips``, ``max_tp``, ``max_pp``, ``execution``).
+        Item indices are positions in ``cells``; every position is
+        delivered exactly once (unless ``stop`` fires).
+
+        This is the warm-service entry point: the service scheduler
+        (:mod:`repro.service`) batches deduplicated cells from many
+        concurrent requests and streams each batch through the same
+        certified plan → price pipeline, usually on a warm session pool
+        (:meth:`start`).
+        """
+        return self._iter_cells(work_fn, spec, list(cells), stop)
+
+    def _iter_cells(self, work_fn, spec: SweepSpec, grid, stop
+                    ) -> Iterator[SweepItem]:
         self.last_shared_stats = None
         self.last_drift_stats = None
         delivered: set[int] = set()
@@ -515,6 +551,88 @@ class DSEEngine:
 
         return {n: self.sweep_scenario(n, smoke=smoke)
                 for n in (names or scenario_names())}
+
+    # -- warm-session lifecycle ----------------------------------------------
+    @property
+    def session_active(self) -> bool:
+        """True between :meth:`start` and :meth:`shutdown`."""
+        return self._session
+
+    def start(self) -> "DSEEngine":
+        """Switch the engine into *warm-session* mode.
+
+        One process pool and (with ``shared_cache``) one cross-process
+        memo store are created now — workers forked/spawned up front,
+        store attached to the parent's cache — and reused by every
+        subsequent ``sweep`` / ``sweep_iter`` / ``sweep_cells_iter`` /
+        ``search`` / ``reprice_grid`` call until :meth:`shutdown`,
+        instead of being built and torn down per sweep. This is what the
+        DSE service daemon (:mod:`repro.service`) runs on: request
+        latency stops paying pool spin-up, and solves harvested by one
+        request seed every later one through the persistent store.
+
+        Two session-mode consequences:
+
+        * all workers predate later calls, so even the fork transport
+          ships full task arguments — ``work_fn`` must be picklable
+          (the scenario registry's builders all are);
+        * calls must not run concurrently from multiple threads — the
+          engine serializes nothing internally (the service scheduler
+          owns exactly one engine thread for this reason).
+
+        Idempotent; returns ``self`` so it nests in ``with``:
+        ``with DSEEngine(...) as engine: ...``. If the pool cannot be
+        built (or ``parallel=False`` / one worker), the session still
+        starts — sweeps run serially against the warm store.
+        """
+        if self._session:
+            return self
+        store = self._open_shared_store()
+        self._session_store = store
+        self._session = True
+        pool = None
+        if self.parallel is not False and self.max_workers > 1:
+            import concurrent.futures as cf
+
+            try:
+                pool = cf.ProcessPoolExecutor(
+                    max_workers=self.max_workers,
+                    mp_context=self._mp_context(),
+                    **self._pool_kwargs(store))
+                # force every worker into existence NOW: the daemon
+                # starts its accept/scheduler threads after this, and
+                # forking a multithreaded process later is the exact
+                # hazard the transport auto-pick exists to avoid
+                list(pool.map(_noop, range(self.max_workers * 4),
+                              chunksize=1))
+            except _pool_infra_errors() as exc:
+                warnings.warn(
+                    f"warm session pool unavailable ({exc!r}); session "
+                    f"continues serially", RuntimeWarning, stacklevel=2)
+                if pool is not None:
+                    pool.shutdown(wait=False, cancel_futures=True)
+                pool = None
+        self._session_pool = pool
+        return self
+
+    def shutdown(self) -> None:
+        """End the warm session: drain + close the session pool, detach
+        and tear down the session store (its aggregated cross-process
+        stats land in ``last_shared_stats``). Idempotent."""
+        pool, self._session_pool = self._session_pool, None
+        store, self._session_store = self._session_store, None
+        self._session = False
+        if pool is not None:
+            pool.shutdown(wait=True, cancel_futures=True)
+        if store is not None:
+            self._close_shared_store(store)
+
+    def __enter__(self) -> "DSEEngine":
+        return self.start()
+
+    def __exit__(self, *exc) -> bool:
+        self.shutdown()
+        return False
 
     # -- budgeted search -----------------------------------------------------
     def search(self, work_fn: Callable[[SystemSpec], TrainWorkload],
@@ -715,6 +833,10 @@ class DSEEngine:
     def _should_parallelize(self, grid_size: int) -> bool:
         if self.parallel is False:
             return False
+        if self._session_pool is not None:
+            # the warm session pool is already paid for — even a small
+            # service batch routes through it
+            return True
         if self.parallel is True:
             return self.max_workers > 1
         return self.max_workers > 1 and grid_size >= 4
@@ -754,7 +876,15 @@ class DSEEngine:
         """Create the sweep's cross-process memo store and attach it to
         the parent's cache too (the parent's own misses then seed the
         workers).  ``None`` when disabled — or when caching is off, which
-        must stay genuinely cold."""
+        must stay genuinely cold.
+
+        In warm-session mode the session's persistent store is returned
+        (re-attached if something detached it) instead of creating a new
+        one — the store is shared across *requests*, not per-sweep."""
+        if self._session_store is not None:
+            if GLOBAL_CACHE.shared is not self._session_store:
+                GLOBAL_CACHE.attach_shared(self._session_store)
+            return self._session_store
         if not self.shared_cache or not self.use_cache:
             return None
         try:
@@ -780,8 +910,19 @@ class DSEEngine:
         """Detach + tear down the sweep's store, keeping its aggregated
         cross-process stats.  Runs in ``finally`` blocks so a pool failure
         (and the serial fallback after it) never leaks a store, a server
-        process, or a stale attachment."""
+        process, or a stale attachment.
+
+        The session store is NOT torn down here — it outlives individual
+        sweeps by design; only its running stats are snapshotted.
+        :meth:`shutdown` (which clears ``_session_store`` first) owns its
+        teardown."""
         if store is None:
+            return
+        if store is self._session_store:
+            try:
+                self.last_shared_stats = store.stats()
+            except Exception:
+                self.last_shared_stats = None
             return
         if GLOBAL_CACHE.shared is store:
             GLOBAL_CACHE.detach_shared()
@@ -797,6 +938,37 @@ class DSEEngine:
             return {}
         return {"initializer": _init_worker_shared,
                 "initargs": (store.handle(),)}
+
+    def _pool(self, workers: int, store):
+        """Pool acquisition: the warm session pool when one is live
+        (kept open on exit; rebuilt first if a dead worker poisoned it),
+        else a fresh per-sweep pool torn down on exit."""
+        import concurrent.futures as cf
+        import contextlib
+
+        if self._session_pool is not None:
+            if getattr(self._session_pool, "_broken", False):
+                # a BrokenProcessPool is permanent for its executor —
+                # rebuild on the same session store so the warm session
+                # (and the daemon on top of it) survives a worker death
+                self._session_pool.shutdown(wait=False, cancel_futures=True)
+                self._session_pool = None
+                self._session = False
+                self.start()
+            if self._session_pool is not None:
+                return contextlib.nullcontext(self._session_pool)
+        pool = cf.ProcessPoolExecutor(max_workers=workers,
+                                      mp_context=self._mp_context(),
+                                      **self._pool_kwargs(store))
+
+        @contextlib.contextmanager
+        def owned():
+            try:
+                yield pool
+            finally:
+                pool.shutdown(wait=True, cancel_futures=True)
+
+        return owned()
 
     # -- per-point path (PR 1 baseline) --------------------------------------
     def _sweep_perpoint(self, work_fn, spec: SweepSpec, grid):
@@ -825,8 +997,6 @@ class DSEEngine:
                     for cell in grid]
 
     def _parallel_eval(self, work_fn, spec: SweepSpec, grid):
-        import concurrent.futures as cf
-
         # Submission order: group the memory variants of each
         # (chip, net, topology) so they land in one worker chunk and share
         # the memory-independent plan solve. The reduce below restores grid
@@ -841,13 +1011,14 @@ class DSEEngine:
         # keep chunks small enough that every worker gets work
         chunk = min(max(group, 1), max(1, per_worker))
         method = self._start_method()
-        ctx = self._mp_context()
         store = self._open_shared_store()
         try:
-            if method != "fork":
+            if method != "fork" or self._session_pool is not None:
                 # spawn/forkserver ship full task args — requires a
                 # picklable work_fn; an unpicklable one is an infra error
-                # → serial fallback
+                # → serial fallback. A warm session pool's workers were
+                # forked at start(), before this call could park anything
+                # in _WORKER_CTX, so the session always ships args too.
                 _require_picklable(work_fn)
                 tasks = [(work_fn, grid[i], spec.n_chips, spec.max_tp,
                           spec.max_pp, spec.execution) for i in order]
@@ -859,10 +1030,7 @@ class DSEEngine:
                                    execution=spec.execution)
                 fn, payload = _eval_index, order
             with self._cache_mode():
-                with cf.ProcessPoolExecutor(max_workers=workers,
-                                            mp_context=ctx,
-                                            **self._pool_kwargs(store)
-                                            ) as pool:
+                with self._pool(workers, store) as pool:
                     mapped = pool.map(fn, payload, chunksize=chunk)
                     out: list[DesignPoint | None] = [None] * len(grid)
                     for j, point in zip(order, mapped):
@@ -888,7 +1056,10 @@ class DSEEngine:
         certify = [prune_on and ti % CERTIFY_EVERY == 0
                    for ti in range(len(groups))]
         method = self._start_method()
-        if method != "fork":
+        if method != "fork" or self._session_pool is not None:
+            # non-fork transports — and the warm session pool, whose
+            # workers were forked at start() before this call existed —
+            # ship full task arguments instead of _WORKER_CTX
             _require_picklable(work_fn)
             payload = [(work_fn, [grid[i] for i in idxs], idxs, spec.n_chips,
                         spec.max_tp, spec.max_pp, spec.execution, ship,
@@ -903,18 +1074,13 @@ class DSEEngine:
 
     def _parallel_plan(self, work_fn, spec: SweepSpec, grid
                        ) -> list[PlannedPoint | None]:
-        import concurrent.futures as cf
-
         workers = min(self.max_workers, max(1, len(grid) // 2))
         store = self._open_shared_store()
         used_ctx = False
         try:
             fn, payload, used_ctx = self._plan_tasks(work_fn, spec, grid)
             with self._cache_mode():
-                with cf.ProcessPoolExecutor(max_workers=workers,
-                                            mp_context=self._mp_context(),
-                                            **self._pool_kwargs(store)
-                                            ) as pool:
+                with self._pool(workers, store) as pool:
                     groups = [g for result in pool.map(fn, payload)
                               for g in result]
         finally:
@@ -1197,37 +1363,38 @@ class DSEEngine:
         window = max(2 * workers, workers + 1)
         store = self._open_shared_store()
         used_ctx = False
-        pool = None
         try:
             fn, payload, used_ctx = self._plan_tasks(work_fn, spec, grid)
-            pool = cf.ProcessPoolExecutor(max_workers=workers,
-                                          mp_context=self._mp_context(),
-                                          **self._pool_kwargs(store))
-            with self._cache_mode():
-                queue = iter(payload)
-                pending: set = set()
-                for task in queue:
-                    pending.add(pool.submit(fn, task))
-                    if len(pending) >= window:
-                        break
-                while pending:
-                    done, pending = cf.wait(
-                        pending, return_when=cf.FIRST_COMPLETED)
-                    for fut in done:
-                        for group in fut.result():
-                            for item in self._stream_group(grid, group):
-                                yield item
-                                if stop is not None and stop(item):
-                                    for f in pending:
-                                        f.cancel()
-                                    return
-                        for task in queue:
-                            pending.add(pool.submit(fn, task))
-                            if len(pending) >= window:
-                                break
+            with self._pool(workers, store) as pool:
+                with self._cache_mode():
+                    queue = iter(payload)
+                    pending: set = set()
+                    for task in queue:
+                        pending.add(pool.submit(fn, task))
+                        if len(pending) >= window:
+                            break
+                    try:
+                        while pending:
+                            done, pending = cf.wait(
+                                pending, return_when=cf.FIRST_COMPLETED)
+                            for fut in done:
+                                for group in fut.result():
+                                    for item in self._stream_group(grid,
+                                                                   group):
+                                        yield item
+                                        if stop is not None and stop(item):
+                                            return
+                                for task in queue:
+                                    pending.add(pool.submit(fn, task))
+                                    if len(pending) >= window:
+                                        break
+                    finally:
+                        # early stop / abandoned generator: cancel what
+                        # never started (matters on the session pool,
+                        # which outlives this call)
+                        for f in pending:
+                            f.cancel()
         finally:
-            if pool is not None:
-                pool.shutdown(wait=True, cancel_futures=True)
             if used_ctx:
                 _WORKER_CTX.clear()
             self._close_shared_store(store)

@@ -863,9 +863,21 @@ def select_plans(cands: CandidateSet, capacities: Sequence[float],
                  backend: str = "numpy",
                  prune: str | bool = "auto") -> list[InterChipPlan | None]:
     """The per-memory-variant argmin for *every* capacity at once: one
-    batched ``price_plans`` call over the (pruned) candidate matrix, then
-    a vectorized lexicographic argmin per capacity — the memory variants
-    of a system never price a candidate twice."""
+    batched ``price_plans`` call over the candidate matrix, then a
+    vectorized lexicographic argmin per capacity — the memory variants
+    of a system never price a candidate twice.
+
+    ``prune`` (``"auto"`` → ``$DFMODEL_PRUNE``, else on) applies the
+    winner-preserving dominance/memory filters of :func:`prune_candidates`
+    before pricing, so only surviving rows hit the backend; selection is
+    certified against the full scalar scan on sampled groups
+    (:func:`certify_scalar_selection` — certify-or-die).
+
+    On an *approximate* backend (``pallas-compiled`` f32) the selection
+    is drift-banded: every candidate within the declared band of the f32
+    argmin is re-priced exactly in f64 and the winner (and its memory
+    feasibility bit, below) comes from those exact values — the returned
+    plans are bit-identical to a numpy-backend run."""
     sel = select_candidates(cands, capacities, backend, prune)
     if sel.priced is None:
         return [None] * len(capacities)
@@ -891,14 +903,20 @@ def optimize_inter_chip(work: TrainWorkload, system: SystemSpec,
     """Search the (TP, PP, DP) × dim-assignment space; return the best
     *feasible* plan by iteration time (ties → first in enumeration order).
 
-    With ``prune="off"`` (the default) this composes
-    :func:`candidate_plans` (memory-independent plan phase) + the scalar
-    :func:`select_plan` scan — the serial *reference* path, deliberately
-    untouched by the pruning stage so certification against it stays
-    meaningful. Passing ``prune="on"``/``"auto"`` routes through the
-    pruned columnar selection instead (:func:`candidate_matrix` +
-    :func:`select_plan` on the pruned matrix), which is certified to
-    return the identical winner.
+    With ``prune="off"`` (the default HERE, unlike the engine's
+    ``"auto"``) this composes :func:`candidate_plans` (the
+    memory-independent plan phase) + the scalar :func:`select_plan` scan
+    — the serial *reference* path, deliberately untouched by both the
+    pruning stage (PR 6) and the batched/drift-banded pricing backends
+    (PRs 5/7), so certification against it stays meaningful: pricing is
+    always scalar f64 here. Passing ``prune="on"``/``"auto"`` (``"auto"``
+    reads ``$DFMODEL_PRUNE``) routes through the pruned columnar
+    selection instead (:func:`candidate_matrix` + :func:`select_plan` on
+    the pruned matrix), which is certified winner-preserving against the
+    scalar scan. Batched sweeps do not call this function per point —
+    they go through :func:`candidate_matrix` / :func:`select_plans` so
+    a system's memory variants share one enumeration and one pricing
+    call.
     """
     if resolve_prune(prune):
         best = select_plan(

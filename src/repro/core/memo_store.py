@@ -341,13 +341,41 @@ class MmapStore:
                 os.unlink(self.path)
 
 
+def diff_stats(before: dict | None, after: dict | None) -> dict | None:
+    """Per-request delta between two :meth:`stats` snapshots of one
+    long-lived store (the DSE service daemon keeps a single store across
+    requests — :mod:`repro.service` reports each request's share of the
+    cross-process reuse with this). Counter keys subtract; ``entries``
+    reports the *new* entries; ``by_space`` carries per-space deltas for
+    the spaces that moved."""
+    if after is None:
+        return None
+    if before is None:
+        return after
+    out = _empty_stats(after.get("backend", "?"))
+    for key in ("hits", "misses", "inserts", "dropped"):
+        out[key] = after.get(key, 0) - before.get(key, 0)
+    out["entries"] = after.get("entries", 0) - before.get("entries", 0)
+    spaces = set(after.get("by_space", {})) | set(before.get("by_space", {}))
+    for space in sorted(spaces):
+        a = after.get("by_space", {}).get(space, {})
+        b = before.get("by_space", {}).get(space, {})
+        delta = {k: a.get(k, 0) - b.get(k, 0)
+                 for k in ("hits", "misses", "inserts", "dropped")}
+        if any(delta.values()):
+            out["by_space"][space] = delta
+    return out
+
+
 # --------------------------- server backend ----------------------------------
-def _send_msg(sock: socket.socket, obj: Any) -> None:
+def send_msg(sock: socket.socket, obj: Any) -> None:
+    """One length-prefixed pickled message (the wire framing shared by
+    the store server and the DSE service daemon, :mod:`repro.service`)."""
     payload = pickle.dumps(obj, PICKLE_PROTO)
     sock.sendall(_U64.pack(len(payload)) + payload)
 
 
-def _recv_msg(sock: socket.socket) -> Any | None:
+def recv_msg(sock: socket.socket) -> Any | None:
     """One length-prefixed message; ``None`` on a cleanly closed peer."""
     head = b""
     while len(head) < _U64.size:
@@ -364,6 +392,11 @@ def _recv_msg(sock: socket.socket) -> Any | None:
         parts.append(chunk)
         got += len(chunk)
     return pickle.loads(b"".join(parts))
+
+
+# legacy private names (pre-service-layer call sites)
+_send_msg = send_msg
+_recv_msg = recv_msg
 
 
 def serve(path: str) -> None:

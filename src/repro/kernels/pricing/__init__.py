@@ -1,9 +1,38 @@
-"""Pallas-lowered DSE pricing kernels (see ``kernel.py`` for the
-bit-exactness story and the compiled-f32 numerics contract). Selected via
-``pricing_backend="pallas"`` (interpret f64, bit-identical) or
-``"pallas-compiled"`` (f32 (8, 128) tiles, settled through the
-drift-budget contract in :mod:`.drift`) on
-``repro.core.pricing.price_plans`` / ``DSEEngine``."""
+"""Pallas-lowered DSE pricing kernels: the backend matrix.
+
+Three kernel variants sit behind ``repro.core.pricing.price_plans``
+(see ``kernel.py`` for the bit-exactness story and the compiled-f32
+numerics contract):
+
+================  ======  ==============  =================================
+backend name      dtype   execution       guarantee
+================  ======  ==============  =================================
+``pallas``        f64     interpret       bit-identical to the numpy
+                          (any host)      scalar reference (``certify``)
+``pallas-         f32     compiled        every output within the declared
+compiled``                (accelerator)   relative drift band δ of the f64
+                                          reference (``certify_f32``)
+``pallas-         f32     interpret twin  same contract as compiled: same
+compiled``                (CPU hosts)     (8, 128) tiling, masking, f32
+                                          dtype — so CI certifies the
+                                          identical numerics
+================  ======  ==============  =================================
+
+Selection: ``DSEEngine(pricing_backend=...)`` /
+``price_plans(backend=...)`` take the backend *name*; ``"auto"``
+resolves through ``repro.core.pricing.default_backend`` —
+``$DFMODEL_PRICING_BACKEND`` if set (unknown spellings raise), else
+``numpy``. ``pallas-compiled`` is the only backend in
+``repro.core.pricing.APPROX_BACKENDS``: decisions made from its f32
+columns must go through the drift-budget contract in :mod:`.drift`
+(banded candidate selection via :func:`banded_winner_rows` — every row
+within δ of the f32 argmin is re-priced exactly in f64 — then
+:func:`certify_banded_rows`, which raises :class:`DriftBandError` if
+observed drift ever exceeds δ). Final winner pricing resolves to
+``repro.core.pricing.exact_backend``, so sweep outputs stay
+bit-identical to the scalar reference end to end even though the mass
+pricing ran in f32. The band δ is ``$DFMODEL_DRIFT_BAND`` (default
+``1e-5``, ~25× above observed drift)."""
 from .drift import (DEFAULT_BAND, DRIFT_ENV_VAR, BandedSelection,
                     DriftBandError, banded_winner_rows, certify_banded_rows,
                     drift_band)

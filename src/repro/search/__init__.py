@@ -17,14 +17,17 @@ Public surface:
   learned-cost-model stepping stone).
 """
 from .grid import DenseGridSpec, ScaledWorkFn, scale_lattice, scaled_name
-from .policy import (Observation, RandomSearch, SearchContext, SearchPolicy,
-                     SearchResult, SuccessiveHalving)
+from .policy import (POLICY_NAMES, Observation, RandomSearch, SearchContext,
+                     SearchPolicy, SearchResult, SuccessiveHalving,
+                     make_policy)
 from .surrogate import (PLAN_FEATURE_FIELDS, RidgeModel, SurrogateSearch,
                         cell_features, fit_plan_ridge, plan_feature_rows)
 
 __all__ = [
     "DenseGridSpec",
     "Observation",
+    "POLICY_NAMES",
+    "make_policy",
     "ScaledWorkFn",
     "scale_lattice",
     "PLAN_FEATURE_FIELDS",

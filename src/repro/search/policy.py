@@ -204,3 +204,29 @@ class SuccessiveHalving(SearchPolicy):
         out = self._queue[self._asked:self._asked + k]
         self._asked += len(out)
         return out
+
+
+#: The policy spellings a DSE-service query may carry (`mode="search"`).
+POLICY_NAMES = ("random", "halving", "surrogate")
+
+
+def make_policy(name: str, *, seed: int = 0,
+                batch_size: int | None = None) -> SearchPolicy:
+    """Construct a shipped policy from its wire name.
+
+    The DSE service (:mod:`repro.service`) ships policies *by name* —
+    a request is plain data, never a pickled callable — and this is the
+    one place those names resolve. Unknown names raise ``ValueError``
+    (the daemon turns that into a structured error reply).
+    """
+    kwargs = {} if batch_size is None else {"batch_size": int(batch_size)}
+    if name == "random":
+        return RandomSearch(seed=seed, **kwargs)
+    if name == "halving":
+        return SuccessiveHalving(**kwargs)
+    if name == "surrogate":
+        from .surrogate import SurrogateSearch
+
+        return SurrogateSearch(seed=seed, **kwargs)
+    raise ValueError(f"unknown search policy {name!r}; "
+                     f"available: {POLICY_NAMES}")

@@ -1,0 +1,10 @@
+"""``python -m repro.service`` — run the standalone DSE daemon.
+
+Preferred over ``-m repro.service.server`` (which works too, but trips
+runpy's already-imported warning because the package imports the server
+module at import time).
+"""
+from .server import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,111 @@
+"""Docs freshness gates.
+
+Three invariants keep `docs/` from rotting:
+
+* the env-var doctests in `docs/ENV_VARS.md` execute against the real
+  parsers (`default_backend` / `resolve_backend` / `default_prune` /
+  `resolve_prune` / `drift_band`), so documented spellings, defaults
+  and error messages cannot drift from the code;
+* every dotted `repro.*` name either doc mentions resolves to a real
+  module (or an attribute of one) — renaming a module without updating
+  the architecture map fails CI;
+* the `DFMODEL_*` catalogue in `docs/ENV_VARS.md` matches exactly the
+  knob names greppable under `src/`, `tools/` and `benchmarks/` — a new
+  knob must be documented, a documented knob must still exist.
+"""
+from __future__ import annotations
+
+import doctest
+import importlib
+import importlib.util
+import os
+import pathlib
+import re
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+DOCS = REPO / "docs"
+
+ENV_VAR_RE = re.compile(r"DFMODEL_[A-Z0-9_]+")
+MODULE_RE = re.compile(r"\brepro(?:\.\w+)+")
+
+#: env vars the ENV_VARS.md doctests mutate (snapshot/restore around them)
+_DOCTEST_VARS = ("DFMODEL_PRICING_BACKEND", "DFMODEL_PRUNE",
+                 "DFMODEL_DRIFT_BAND")
+
+
+def test_env_vars_doctests_execute():
+    saved = {k: os.environ.get(k) for k in _DOCTEST_VARS}
+    try:
+        for k in _DOCTEST_VARS:
+            os.environ.pop(k, None)
+        result = doctest.testfile(str(DOCS / "ENV_VARS.md"),
+                                  module_relative=False, verbose=False)
+        assert result.attempted >= 15, "doctest examples went missing"
+        assert result.failed == 0, (
+            f"{result.failed} of {result.attempted} ENV_VARS.md doctests "
+            f"failed (see captured stdout)")
+    finally:
+        for k, v in saved.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+
+
+def _resolves(name: str) -> bool:
+    """True if ``name`` is an importable module, or a trailing-attribute
+    path on one (``repro.core.pricing.default_backend``)."""
+    parts = name.split(".")
+    for cut in range(len(parts), 1, -1):
+        modname = ".".join(parts[:cut])
+        try:
+            spec = importlib.util.find_spec(modname)
+        except (ModuleNotFoundError, ValueError):
+            spec = None
+        if spec is None:
+            continue
+        obj = importlib.import_module(modname)
+        try:
+            for attr in parts[cut:]:
+                obj = getattr(obj, attr)
+        except AttributeError:
+            return False
+        return True
+    return False
+
+
+def test_architecture_names_are_fresh():
+    text = (DOCS / "ARCHITECTURE.md").read_text()
+    names = sorted(set(MODULE_RE.findall(text)))
+    assert len(names) >= 20, "the architecture map lost its module names"
+    missing = [n for n in names if not _resolves(n)]
+    assert not missing, (
+        f"ARCHITECTURE.md names things that no longer exist: {missing}")
+
+
+def test_env_vars_doc_names_are_fresh():
+    text = (DOCS / "ENV_VARS.md").read_text()
+    missing = [n for n in sorted(set(MODULE_RE.findall(text)))
+               if not _resolves(n)]
+    assert not missing, (
+        f"ENV_VARS.md names things that no longer exist: {missing}")
+
+
+def _tree_env_vars() -> set[str]:
+    found: set[str] = set()
+    for sub in ("src", "tools", "benchmarks"):
+        for path in (REPO / sub).rglob("*"):
+            if path.is_file() and path.suffix in (".py", ".sh"):
+                found |= set(ENV_VAR_RE.findall(path.read_text()))
+    return found
+
+
+def test_env_var_catalogue_in_sync():
+    doc = set(ENV_VAR_RE.findall((DOCS / "ENV_VARS.md").read_text()))
+    tree = _tree_env_vars()
+    undocumented = sorted(tree - doc)
+    stale = sorted(doc - tree)
+    assert not undocumented, (
+        f"DFMODEL_* knobs missing from docs/ENV_VARS.md: {undocumented}")
+    assert not stale, (
+        f"docs/ENV_VARS.md documents knobs nothing reads: {stale}")

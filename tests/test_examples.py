@@ -39,6 +39,14 @@ def test_dse_scenario_example():
     assert "best throughput utilization" in out
 
 
+def test_serve_dse_example():
+    out = _run(["examples/serve_dse.py"])
+    assert "dedup hits" in out
+    assert "zero new solves" in out
+    assert "certified=True" in out
+    assert "serve_dse: OK" in out
+
+
 def test_launch_train_module():
     out = _run(["-m", "repro.launch.train", "--arch", "olmo_1b", "--smoke",
                 "--steps", "4", "--mesh", "2x4", "--fsdp"],

@@ -1,0 +1,296 @@
+"""DSE service tests: warm-session engine lifecycle, the daemon's
+multi-client contracts (bit-identical winners, shared cells priced
+exactly once, per-client budgets, fair streaming), and the failure
+edges the daemon must survive (client disconnect mid-stream, malformed
+requests, garbage frames).
+
+The service engine here runs ``parallel=False`` — the warm *pool* path
+is covered by the warm-session engine tests above plus the bench/CI
+smoke legs; the scheduler/protocol contracts are transport-independent
+and a serial engine keeps these tests fast and robust on 1-CPU runners.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import socket
+import struct
+import threading
+import time
+
+import pytest
+
+from repro.core.dse_engine import DSEEngine
+from repro.core.memo_store import diff_stats, recv_msg, send_msg
+from repro.service import DSEClient, DSEService, ServiceError
+from repro.service.protocol import RequestError, parse_query, resolve_query
+from repro.workloads.scenarios import get_scenario
+
+SCENARIO = "llm"
+
+
+def _mp_context():
+    return os.environ.get("DFMODEL_TEST_MP_CONTEXT") or None
+
+
+def _reference_items():
+    """Per-grid-index reference points from a cold serial engine."""
+    sc = get_scenario(SCENARIO, smoke=True)
+    eng = DSEEngine(parallel=False)
+    return {it.index: it.point
+            for it in eng.sweep_cells_iter(sc.work_fn, sc.spec.grid(),
+                                           sc.spec)}
+
+
+def _grid():
+    return get_scenario(SCENARIO, smoke=True).spec.grid()
+
+
+# --- warm-session engine lifecycle ------------------------------------------
+def test_warm_session_sweeps_bit_identical_and_reentrant():
+    sc = get_scenario(SCENARIO, smoke=True)
+    ref = [p.row() for p in DSEEngine(parallel=False).sweep(sc.work_fn,
+                                                            sc.spec)]
+    kwargs = {}
+    if _mp_context():
+        kwargs["mp_context"] = _mp_context()
+    with DSEEngine(max_workers=2, shared_cache=True, **kwargs) as eng:
+        assert eng.session_active
+        a = [p.row() for p in eng.sweep(sc.work_fn, sc.spec)]
+        b = [p.row() for p in eng.sweep(sc.work_fn, sc.spec)]
+        assert a == ref and b == ref
+        # the session store survived both sweeps (stats snapshotted, not
+        # torn down) — and a cells subset streams through the same pool
+        items = list(eng.sweep_cells_iter(sc.work_fn, sc.spec.grid()[:5],
+                                          sc.spec))
+        assert sorted(i.index for i in items) == list(range(5))
+    assert not eng.session_active
+    # post-shutdown the engine still works in per-sweep mode
+    c = [p.row() for p in eng.sweep(sc.work_fn, sc.spec)]
+    assert c == ref
+
+
+def test_warm_session_start_is_idempotent_and_serial_engines_session():
+    eng = DSEEngine(parallel=False)
+    try:
+        assert eng.start() is eng and eng.start() is eng
+        assert eng.session_active and eng._session_pool is None
+    finally:
+        eng.shutdown()
+        eng.shutdown()  # idempotent
+
+
+def test_diff_stats_reports_request_deltas():
+    before = {"backend": "mmap", "hits": 2, "misses": 5, "inserts": 5,
+              "dropped": 0, "entries": 5,
+              "by_space": {"plan": {"hits": 2, "misses": 5, "inserts": 5,
+                                    "dropped": 0}}}
+    after = {"backend": "mmap", "hits": 9, "misses": 6, "inserts": 6,
+             "dropped": 0, "entries": 6,
+             "by_space": {"plan": {"hits": 9, "misses": 6, "inserts": 6,
+                                   "dropped": 0}}}
+    delta = diff_stats(before, after)
+    assert delta["hits"] == 7 and delta["entries"] == 1
+    assert delta["by_space"]["plan"]["hits"] == 7
+    assert diff_stats(None, after) is after
+    assert diff_stats(before, None) is None
+
+
+# --- protocol validation ----------------------------------------------------
+def test_parse_query_rejects_malformed_requests():
+    with pytest.raises(RequestError) as exc:
+        parse_query({"op": "query", "mode": "warp"})
+    assert exc.value.code == "bad-mode"
+    with pytest.raises(RequestError) as exc:
+        parse_query({"op": "query", "budget": 0})
+    assert exc.value.code == "bad-budget"
+    with pytest.raises(RequestError) as exc:
+        parse_query({"op": "query", "cells": [1, 1]})
+    assert exc.value.code == "bad-cells"
+    with pytest.raises(RequestError) as exc:
+        parse_query({"op": "query", "frobnicate": 1})
+    assert exc.value.code == "bad-field"
+    with pytest.raises(RequestError) as exc:
+        resolve_query(parse_query({"op": "query", "scenario": "nope"}))
+    assert exc.value.code == "unknown-scenario"
+    with pytest.raises(RequestError) as exc:
+        resolve_query(parse_query({"op": "query", "cells": [10 ** 6]}))
+    assert exc.value.code == "bad-cells"
+    with pytest.raises(RequestError) as exc:
+        resolve_query(parse_query({"op": "query", "mode": "search",
+                                   "policy": "psychic"}))
+    assert exc.value.code == "unknown-policy"
+
+
+# --- the shared daemon the remaining tests multiplex ------------------------
+@pytest.fixture(scope="module")
+def service():
+    with DSEService(parallel=False, batch_cells=4) as svc:
+        yield svc
+
+
+def test_two_concurrent_clients_winners_bit_identical_and_priced_once():
+    """The acceptance criterion, in-process: overlapping concurrent
+    grids → every shared cell priced exactly once, every row (and hence
+    the winner) bit-identical to a direct DSEEngine sweep."""
+    ref = _reference_items()
+    n = len(_grid())
+    a_cells = list(range(0, 2 * n // 3))
+    b_cells = list(range(n // 3, n))
+    overlap = set(a_cells) & set(b_cells)
+    results: dict = {}
+
+    # a fresh service: this test asserts exact priced-once accounting
+    with DSEService(parallel=False, batch_cells=4) as svc:
+        def run(name, cells):
+            with DSEClient(svc.path) as cli:
+                results[name] = cli.sweep(scenario=SCENARIO, smoke=True,
+                                          cells=cells, client=name)
+
+        threads = [threading.Thread(target=run, args=("A", a_cells)),
+                   threading.Thread(target=run, args=("B", b_cells))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+        with DSEClient(svc.path) as cli:
+            sched = cli.stats()["scheduler"]
+
+    assert set(results) == {"A", "B"}
+    # exactly-once pricing: the union of both grids, nothing more
+    assert sched["cells_priced"] == n
+    assert sched["dedup_hits"] >= len(overlap)
+    assert (results["A"].summary["dedup_hits"]
+            + results["B"].summary["dedup_hits"]) == sched["dedup_hits"]
+    for name, cells in (("A", a_cells), ("B", b_cells)):
+        rep = results[name]
+        assert sorted(rep.indices) == cells
+        for idx, pt in zip(rep.indices, rep.points):
+            ref_pt = ref[idx]
+            assert (pt is None) == (ref_pt is None)
+            if pt is not None:
+                assert pt.row() == ref_pt.row()
+        # the winner is the lexicographic argmin over the client's cells
+        want = min(((pt is None or not pt.plan.feasible),
+                    float("inf") if pt is None else pt.plan.iter_time, idx)
+                   for idx, pt in ((i, ref[i]) for i in cells))
+        got = rep.summary["winner"]
+        assert (got["index"], got["feasible"], got["iter_time"]) == (
+            want[2], not want[0], want[1])
+
+
+def test_full_sweep_matches_direct_engine(service):
+    sc = get_scenario(SCENARIO, smoke=True)
+    direct = [p.row() for p in DSEEngine(parallel=False).sweep(sc.work_fn,
+                                                               sc.spec)]
+    with DSEClient(service.path) as cli:
+        rep = cli.sweep(scenario=SCENARIO, smoke=True)
+    assert rep.rows() == direct
+    assert len(rep.frontier()) >= 1
+
+
+def test_repeat_request_served_from_memo(service):
+    with DSEClient(service.path) as cli:
+        first = cli.sweep(scenario=SCENARIO, smoke=True)
+        before = cli.stats()["scheduler"]["cells_priced"]
+        again = cli.sweep(scenario=SCENARIO, smoke=True)
+        after = cli.stats()["scheduler"]["cells_priced"]
+    assert after == before  # warm request priced nothing new
+    assert again.summary["dedup_hits"] == again.summary["rows"]
+    assert again.rows() == first.rows()
+
+
+def test_client_disconnect_mid_stream_leaves_daemon_serviceable(service):
+    # hand-rolled client: send a sweep query, read ONE message, vanish
+    sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    sock.connect(service.path)
+    send_msg(sock, {"op": "query", "mode": "sweep", "scenario": SCENARIO,
+                    "smoke": True, "client": "rude"})
+    assert recv_msg(sock) is not None  # one streamed message arrived
+    sock.close()  # mid-stream disconnect
+    # the daemon (and its warm engine) must keep serving everyone else
+    with DSEClient(service.path) as cli:
+        rep = cli.sweep(scenario=SCENARIO, smoke=True)
+        assert rep.summary["rows"] == len(_grid())
+        assert cli.ping()["kind"] == "pong"
+
+
+def test_malformed_request_structured_error_daemon_survives(service):
+    with DSEClient(service.path) as cli:
+        with pytest.raises(ServiceError) as exc:
+            cli.sweep(scenario="not-a-scenario")
+        assert exc.value.code == "unknown-scenario"
+        # the same connection keeps working after the error
+        assert cli.ping()["kind"] == "pong"
+        with pytest.raises(ServiceError) as exc:
+            list(cli.query_iter(mode="warp"))
+        assert exc.value.code == "bad-mode"
+        with pytest.raises(ServiceError) as exc:
+            cli._roundtrip({"op": "frobnicate"})
+        assert exc.value.code == "bad-op"
+
+
+def test_garbage_frame_gets_error_reply_daemon_survives(service):
+    # raw bytes that length-prefix fine but do not unpickle
+    sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    sock.connect(service.path)
+    payload = b"this is not a pickle"
+    sock.sendall(struct.pack("<Q", len(payload)) + payload)
+    reply = recv_msg(sock)
+    assert reply is not None and reply["kind"] == "error"
+    assert reply["code"] == "bad-frame"
+    sock.close()
+    with DSEClient(service.path) as cli:  # daemon alive
+        assert cli.ping()["kind"] == "pong"
+
+
+def test_budget_bounds_fresh_prices_and_reports_skips():
+    n = len(_grid())
+    budget = 3
+    with DSEService(parallel=False, batch_cells=4) as svc:
+        with DSEClient(svc.path) as cli:
+            rep = cli.sweep(scenario=SCENARIO, smoke=True, budget=budget)
+            sched = cli.stats()["scheduler"]
+    assert rep.summary["budget_used"] == budget
+    assert sched["cells_priced"] == budget
+    assert rep.summary["skipped"] == n - budget
+    assert rep.summary["rows"] == budget
+
+
+def test_search_mode_certified_winner_and_memo_harvest(service):
+    with DSEClient(service.path) as cli:
+        before = cli.stats()["scheduler"]["memo_cells"]
+        rep = cli.search(scenario=SCENARIO, smoke=True, policy="halving",
+                         budget=6)
+        after = cli.stats()["scheduler"]["memo_cells"]
+    assert rep.summary["certified"] is True
+    assert rep.summary["best_index"] == rep.summary["oracle_index"]
+    assert rep.summary["evals_used"] <= 6
+    assert rep.winner is not None and rep.winner["feasible"]
+    assert after >= before  # observations seeded the shared memo
+    # the certified winner matches the direct exhaustive argmin
+    ref = _reference_items()
+    want = min(((pt is None or not pt.plan.feasible),
+                float("inf") if pt is None else pt.plan.iter_time, idx)
+               for idx, pt in ref.items())
+    assert rep.summary["best_index"] == want[2]
+
+
+def test_stats_reports_engine_and_scheduler(service):
+    with DSEClient(service.path) as cli:
+        st = cli.stats()
+    assert st["kind"] == "stats"
+    assert st["engine"]["session_active"] is True
+    assert st["scheduler"]["requests"] >= 1
+    assert st["uptime_s"] >= 0
+
+
+def test_shutdown_op_stops_daemon():
+    svc = DSEService(parallel=False)
+    svc.start()
+    with DSEClient(svc.path) as cli:
+        cli.shutdown_server()
+    assert svc.wait(timeout=10)
+    svc.close()
+    with pytest.raises((FileNotFoundError, ConnectionRefusedError)):
+        DSEClient(svc.path, connect_timeout=0.2)

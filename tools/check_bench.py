@@ -40,6 +40,16 @@ Runs the smoke `speedup_report` (the same measurement `benchmarks.run
   0.5 — the band is supposed to *bound* the exact work, not hide it),
   and the grid cells/sec + streamed kernel rows/sec above their
   baseline-over-slowdown floors;
+* **DSE service** — the report's `service` block (the warm daemon of
+  `repro.service`) must show the warm full-grid repeat bit-identical to
+  a direct `DSEEngine.sweep` (`winners_identical`), the warm request at
+  least $DFMODEL_BENCH_SERVICE_MIN_SPEEDUP× faster than the cold
+  daemon-start-plus-first-sweep phase (default 2.0 — warm requests are
+  answered from the shared memo, so this certifies the daemon actually
+  keeps state warm), the cold concurrent clients sharing at least
+  $DFMODEL_BENCH_SERVICE_MIN_DEDUP cross-client dedup hits (default 1:
+  overlapping grids provably price shared cells once), and the warm
+  streamed rows/sec above its baseline-over-slowdown floor;
 * **candidate pruning** — the report's `prune` block must show the
   pruning stage enabled with `winners_identical` true (the prune-on
   engine's DesignPoint rows reproduce the prune-off engine's
@@ -174,6 +184,40 @@ def _check_compiled(problems: list[str], fresh: dict, base: dict,
             f"{slowdown:g})")
 
 
+def _check_service(problems: list[str], fresh: dict, base: dict,
+                   slowdown: float, min_speedup: float,
+                   min_dedup: int) -> None:
+    """The warm-daemon contract gate for the `service` report block."""
+    entry = fresh.get("service")
+    if not entry:
+        problems.append("service block missing: the DSE service benchmark "
+                        "did not run")
+        return
+    if not entry.get("winners_identical", False):
+        problems.append("service.winners_identical is False: the warm "
+                        "daemon's rows no longer reproduce a direct "
+                        "DSEEngine.sweep bit-for-bit")
+    speedup = entry.get("warm_speedup", 0.0)
+    if speedup < min_speedup:
+        problems.append(
+            f"service warm-request speedup {speedup:.2f}x < floor "
+            f"{min_speedup:g}x: the daemon no longer answers warm "
+            f"requests from its shared memo")
+    dedup = entry.get("dedup_hits", 0)
+    if dedup < min_dedup:
+        problems.append(
+            f"service cross-client dedup hits {dedup} < {min_dedup}: "
+            f"concurrent overlapping grids no longer share priced cells")
+    base_entry = base.get("service") or {}
+    floor = base_entry.get("rows_per_s", 0.0) / slowdown
+    if entry.get("rows_per_s", 0.0) < floor:
+        problems.append(
+            f"service warm stream {entry.get('rows_per_s', 0.0):.1f} "
+            f"rows/s < {floor:.1f} (baseline "
+            f"{base_entry.get('rows_per_s', 0.0):.1f} / slowdown limit "
+            f"{slowdown:g})")
+
+
 def compare(fresh: dict, base: dict,
             slowdown: float, min_speedup: float,
             hit_drop: float, shared_min_hits: int = 1,
@@ -181,7 +225,9 @@ def compare(fresh: dict, base: dict,
             prune_slack: float = 1.5,
             search_max_frac: float = 0.2,
             grid_min_cells: int = 100_000,
-            repriced_max_frac: float = 0.5) -> list[str]:
+            repriced_max_frac: float = 0.5,
+            service_min_speedup: float = 2.0,
+            service_min_dedup: int = 1) -> list[str]:
     """Return a list of human-readable regression messages (empty = pass)."""
     problems: list[str] = []
     if not fresh.get("rows_identical", False):
@@ -288,6 +334,9 @@ def compare(fresh: dict, base: dict,
     # the compiled f32 drift-budget contract block
     _check_compiled(problems, fresh, base, slowdown, grid_min_cells,
                     repriced_max_frac)
+    # the warm-daemon service block
+    _check_service(problems, fresh, base, slowdown, service_min_speedup,
+                   service_min_dedup)
     return problems
 
 
@@ -317,6 +366,10 @@ def main() -> int:
                                         "100000"))
     repriced_max_frac = float(os.environ.get("DFMODEL_BENCH_REPRICED_FRAC",
                                              "0.5"))
+    service_min_speedup = float(os.environ.get(
+        "DFMODEL_BENCH_SERVICE_MIN_SPEEDUP", "2.0"))
+    service_min_dedup = int(os.environ.get(
+        "DFMODEL_BENCH_SERVICE_MIN_DEDUP", "1"))
 
     fresh = _fresh_report(args.fresh_out)
     if args.update:
@@ -336,7 +389,9 @@ def main() -> int:
                        prune_slack=prune_slack,
                        search_max_frac=search_max_frac,
                        grid_min_cells=grid_min_cells,
-                       repriced_max_frac=repriced_max_frac)
+                       repriced_max_frac=repriced_max_frac,
+                       service_min_speedup=service_min_speedup,
+                       service_min_dedup=service_min_dedup)
     for path, vals in fresh.get("paths", {}).items():
         print(f"  {path:20s} {vals['points_per_s']:10.1f} points/s "
               f"(baseline "
@@ -374,6 +429,13 @@ def main() -> int:
               f"{cstream.get('rows_per_s', 0.0):.0f} rows/s")
     else:
         print("  compiled: unavailable (no jax)")
+    service = fresh.get("service") or {}
+    print(f"  service: warm {service.get('warm_request_s', 0.0):.3f}s vs "
+          f"cold {service.get('cold_request_s', 0.0):.3f}s "
+          f"({service.get('warm_speedup', 0.0):.1f}x), "
+          f"{service.get('dedup_hits', 0)} cross-client dedup hits, "
+          f"{service.get('rows_per_s', 0.0):.0f} warm rows/s, winners "
+          f"identical: {service.get('winners_identical', False)}")
     if problems:
         print("bench gate: REGRESSION", file=sys.stderr)
         for p in problems:

@@ -1,0 +1,97 @@
+"""CI gate: the DSE service daemon's multi-client contract.
+
+Starts one in-process ``DSEService`` daemon, runs TWO concurrent
+clients sweeping overlapping two-thirds grids of the smoke llm
+scenario, and asserts the house invariants end-to-end over the real
+unix-socket transport:
+
+* every row each client receives is bit-identical to a direct
+  ``DSEEngine.sweep`` over the same cells (so the winners are too);
+* the shared cells are priced exactly once by the daemon
+  (``cells_priced`` equals the union of both grids) with cross-client
+  dedup hits > 0;
+* a warm full-grid repeat streams entirely from the shared memo (zero
+  new prices) and also matches the direct sweep bit-for-bit;
+* a malformed request gets a structured error and the daemon keeps
+  serving on the same connection.
+
+  PYTHONPATH=src python tools/check_service.py
+"""
+import sys
+import threading
+
+from repro.core import DSEEngine
+from repro.service import DSEClient, DSEService, ServiceError
+from repro.workloads.scenarios import get_scenario
+
+SCENARIO = "llm"
+
+
+def main() -> int:
+    sc = get_scenario(SCENARIO, smoke=True)
+    eng = DSEEngine(parallel=False)
+    ref = {it.index: it.point
+           for it in eng.sweep_cells_iter(sc.work_fn, sc.spec.grid(),
+                                          sc.spec)}
+    direct_rows = [p.row() for p in ref.values() if p is not None]
+    n = len(sc.spec.grid())
+    grids = {"A": list(range(0, 2 * n // 3)),
+             "B": list(range(n // 3, n))}
+    overlap = set(grids["A"]) & set(grids["B"])
+    replies: dict = {}
+
+    with DSEService(batch_cells=4) as svc:
+        def run(name):
+            with DSEClient(svc.path) as cli:
+                replies[name] = cli.sweep(scenario=SCENARIO, smoke=True,
+                                          cells=grids[name], client=name)
+
+        threads = [threading.Thread(target=run, args=(name,))
+                   for name in grids]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=300)
+
+        with DSEClient(svc.path) as cli:
+            sched = cli.stats()["scheduler"]
+            warm = cli.sweep(scenario=SCENARIO, smoke=True)
+            warm_priced = cli.stats()["scheduler"]["cells_priced"]
+            try:
+                cli.sweep(scenario="no-such-scenario")
+            except ServiceError as exc:
+                assert exc.code == "unknown-scenario", exc.code
+            else:
+                raise AssertionError("malformed request did not error")
+            assert cli.ping()["kind"] == "pong", "daemon died after error"
+
+    assert set(replies) == set(grids), f"clients finished: {set(replies)}"
+    for name, cells in grids.items():
+        rep = replies[name]
+        assert sorted(rep.indices) == cells, f"client {name} row coverage"
+        for idx, pt in zip(rep.indices, rep.points):
+            want = ref[idx]
+            assert (pt is None) == (want is None), f"cell {idx} feasibility"
+            if pt is not None:
+                assert pt.row() == want.row(), f"cell {idx} row drift"
+        print(f"client {name}: {rep.summary['rows']} rows, winner cell "
+              f"{rep.summary['winner']['index']}, "
+              f"{rep.summary['dedup_hits']} dedup hits -> identical to "
+              f"direct sweep")
+    assert sched["cells_priced"] == n, (
+        f"priced {sched['cells_priced']} cells, expected exactly {n}")
+    assert sched["dedup_hits"] >= len(overlap) > 0, (
+        f"cross-client dedup hits {sched['dedup_hits']} < overlap "
+        f"{len(overlap)}")
+    assert warm_priced == n, "warm repeat priced new cells"
+    assert warm.rows() == direct_rows, "warm sweep rows drifted"
+    print(f"daemon: {sched['cells_priced']} cells priced once for "
+          f"{sched['rows_streamed']} streamed rows "
+          f"({sched['dedup_hits']} cross-client dedup hits); warm repeat "
+          f"from memo, bit-identical")
+    print("service smoke: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -103,6 +103,19 @@ sys.exit(0 if '$method' in m.get_all_start_methods() else 1)"; then
             python -m pytest -x -q tests/test_search.py
 done
 
+# DSE service: one warm daemon, two concurrent clients sweeping
+# overlapping grids over the real unix-socket transport — winners
+# bit-identical to a direct DSEEngine.sweep, shared cells priced
+# exactly once (cross-client dedup), warm repeat served from the memo,
+# malformed requests answered structurally with the daemon surviving
+gate "service smoke" env PYTHONPATH=src python tools/check_service.py
+
+# docs freshness: every repro.* module ARCHITECTURE.md names must
+# import, the ENV_VARS.md catalogue must match the DFMODEL_* knobs the
+# tree actually reads, and the doctest transcripts must execute
+gate "docs freshness" \
+    env PYTHONPATH=src python -m pytest -x -q tests/test_docs.py
+
 # bench-regression gate: fresh smoke BENCH_dse.json vs the committed
 # baseline (row identity, points/sec floors, warm phased speedup, memo
 # cache hit-rate, shared-store cross-worker hits) — tolerances in
