@@ -330,6 +330,75 @@ def service_block(scenario_name: str, smoke: bool) -> dict:
     }
 
 
+def learned_block(sc, spec) -> dict:
+    """The report's ``learned`` block: the rank-stage contract.
+
+    Flow (mirrors a warm service session): every smoke scenario is swept
+    once prune-on to build the ``candmat`` harvest, a
+    :class:`repro.learned.model.LearnedModel` is fitted + calibrated
+    from it, then
+
+    * **scenarios** — every smoke scenario swept rank-on vs rank-off:
+      per-scenario dominance survivors vs rank survivors, and
+      DesignPoint rows compared bit-for-bit (``winners_identical``);
+    * **grid** — a full :class:`DenseGridSpec` ``reprice_grid`` pass
+      rank-on: ``shrink_vs_dominance = survived / rank_survived`` is the
+      dense-grid pricing-volume reduction the gate checks (winners are
+      certified inside the call — it raises rather than report a lie).
+
+    ``tools/check_bench.py`` gates ``winners_identical``, the dense-grid
+    shrink floor ($DFMODEL_BENCH_RANK_SHRINK, default 3×), and
+    ``model.recall >= model.recall_target`` — the calibration must
+    actually achieve the recall it states."""
+    from repro.learned.model import fit_ranker
+
+    clear_caches()
+    warm = DSEEngine(phased=True, parallel=False, prune="on")
+    for name in scenario_names():
+        warm.sweep_scenario(name, smoke=True)
+    model = fit_ranker()
+    if model is None:
+        return {"enabled": False}
+    scenarios: dict[str, dict] = {}
+    dom = ranked = 0
+    identical = True
+    for name in scenario_names():
+        on = DSEEngine(phased=True, parallel=False, prune="on", rank="on")
+        res_on = on.sweep_scenario(name, smoke=True)
+        st = on.last_plan_stats or {}
+        off = DSEEngine(phased=True, parallel=False, prune="on", rank="off")
+        res_off = off.sweep_scenario(name, smoke=True)
+        same = ([p.row() for p in res_on.points]
+                == [p.row() for p in res_off.points])
+        identical = identical and same
+        dom += st.get("survived", 0)
+        ranked += st.get("rank_survived", 0)
+        scenarios[name] = {"survived": st.get("survived", 0),
+                           "rank_survived": st.get("rank_survived", 0),
+                           "winners_identical": same}
+    dense = DenseGridSpec().spec()
+    eng = DSEEngine(prune="on", rank="on")
+    rep = eng.reprice_grid(sc.work_fn, dense)
+    return {
+        "enabled": True,
+        "model": {"n_train": model.n_train, "n_groups": model.n_groups,
+                  "keep_frac": model.keep_frac, "recall": model.recall,
+                  "recall_target": model.recall_target},
+        "scenarios": scenarios,
+        "smoke_survived": dom,
+        "smoke_rank_survived": ranked,
+        "smoke_shrink_vs_dominance": dom / max(1, ranked),
+        "winners_identical": identical,
+        "grid": {"cells": rep["cells"], "rank": rep["rank"],
+                 "enumerated": rep["enumerated"],
+                 "survived": rep["survived"],
+                 "rank_survived": rep["rank_survived"],
+                 "winners_identical": rep["winners_identical"]},
+        "shrink_vs_dominance": (rep["survived"]
+                                / max(1, rep["rank_survived"])),
+    }
+
+
 def _frontier_rows(name: str, result) -> list[dict]:
     return [{"workload": name, "pareto": True, **p.row()}
             for p in result.frontier]
@@ -429,6 +498,7 @@ def speedup_report(scenario_name: str = "llm", smoke: bool = True,
     search = search_block(sc, spec)
     compiled = compiled_block(sc, spec)
     service = service_block(scenario_name, smoke)
+    learned = learned_block(sc, spec)
 
     ref = rows_by_path["serial_uncached"]
     identical = all(rows == ref for rows in rows_by_path.values())
@@ -495,6 +565,10 @@ def speedup_report(scenario_name: str = "llm", smoke: bool = True,
         # vs a warm full-grid repeat served from the shared memo, rows
         # bit-identical to a direct engine sweep
         "service": service,
+        # the learned rank stage: calibrated model from the smoke-sweep
+        # harvest, per-scenario rank-on/off winner identity, and the
+        # dense-grid pricing-volume shrink over dominance-only
+        "learned": learned,
         "shared_cache": shared_stats,
         "cache": {"hits": stats.hits, "misses": stats.misses,
                   "entries": stats.entries,
@@ -539,6 +613,14 @@ def speedup_report(scenario_name: str = "llm", smoke: bool = True,
     else:
         out.append({"path": "compiled", "available": False})
     out.append({"path": "service", **service})
+    if learned.get("enabled"):
+        out.append({"path": "learned", "keep_frac": learned["model"]["keep_frac"],
+                    "recall": learned["model"]["recall"],
+                    "smoke_shrink": learned["smoke_shrink_vs_dominance"],
+                    "grid_shrink": learned["shrink_vs_dominance"],
+                    "winners_identical": learned["winners_identical"]})
+    else:
+        out.append({"path": "learned", "enabled": False})
     out.extend(stats.rows())
     if shared_stats is not None:
         out.append({"space": "SHARED", "backend": shared_stats["backend"],

@@ -224,17 +224,20 @@ def _plan_group_index(task: tuple) -> list[PlannedGroup]:
                                 max_tp=ctx["max_tp"], max_pp=ctx["max_pp"],
                                 execution=ctx["execution"],
                                 ship_matrix=ctx["ship_matrix"],
-                                prune=ctx["prune"], certify=certify)
+                                prune=ctx["prune"], certify=certify,
+                                ranker=ctx.get("ranker"),
+                                rank_keep_frac=ctx.get("rank_keep_frac"))
     return [_remap_group(g, idxs) for g in groups]
 
 
 def _plan_group_args(args: tuple) -> list[PlannedGroup]:
     (work_fn, cells, idxs, n_chips, max_tp, max_pp, execution, ship,
-     prune, certify) = args
+     prune, ranker, rank_keep_frac, certify) = args
     groups = plan_design_groups(work_fn, cells, n_chips, max_tp=max_tp,
                                 max_pp=max_pp, execution=execution,
                                 ship_matrix=ship, prune=prune,
-                                certify=certify)
+                                certify=certify, ranker=ranker,
+                                rank_keep_frac=rank_keep_frac)
     return [_remap_group(g, idxs) for g in groups]
 
 
@@ -369,6 +372,32 @@ class DSEEngine:
         bit-identical to the unpruned reference either way; pruning only
         shrinks how many rows get priced (``last_plan_stats`` reports
         enumerated / survived / priced).
+    rank:
+        Learned rank-stage policy (:mod:`repro.learned`): ``"on"``,
+        ``"off"``, a bool, or ``"auto"`` (env var ``DFMODEL_RANK``, else
+        **off** — the learned stage is opt-in). With rank on (and pruning
+        on — the rank stage refines the dominance survivors, so prune off
+        implies rank off), the engine fits a ridge ranker on the memo
+        cache's ``candmat`` harvest once per sweep (warm sessions refit
+        incrementally when :meth:`repro.core.memo.SolveCache.diff_stats`
+        shows the harvest grew) and ships it to the workers; each group
+        then prices only the model's calibrated top fraction union the
+        staircase safety set (:func:`repro.learned.rank.rank_keep`).
+        When the harvest is below the staleness guard
+        (:data:`repro.learned.model.MIN_TRAIN_ROWS`) the engine degrades
+        to rank-off for that sweep. Winners stay certified identical to
+        the unranked pipeline (same sampled scalar certification);
+        ``last_plan_stats`` reports ``rank`` / ``rank_survived``.
+    rank_keep_frac:
+        Override for the model's calibrated keep fraction, a float in
+        (0, 1] (default ``None`` → ``$DFMODEL_RANK_KEEP_FRAC``, else the
+        calibrated fraction).
+    rank_model_path:
+        Optional persistence path for the trained
+        :class:`repro.learned.model.LearnedModel`: loaded when the
+        in-process harvest is too small to fit (a cold service process
+        reusing the previous session's model), saved after every
+        successful fit.
     """
 
     def __init__(self, max_workers: int | None = None,
@@ -380,7 +409,10 @@ class DSEEngine:
                  pricing_backend: str = "auto",
                  shared_cache: bool | str = False,
                  prune: str | bool = "auto",
-                 price_chunk_rows: int = 65536) -> None:
+                 price_chunk_rows: int = 65536,
+                 rank: str | bool = "auto",
+                 rank_keep_frac: float | None = None,
+                 rank_model_path: str | None = None) -> None:
         self.max_workers = max_workers or (os.cpu_count() or 1)
         self.parallel = parallel
         self.use_cache = use_cache
@@ -403,6 +435,20 @@ class DSEEngine:
             raise ValueError(f"price_chunk_rows must be a positive int, "
                              f"got {price_chunk_rows!r}")
         self.price_chunk_rows = price_chunk_rows
+        from ..learned.rank import resolve_rank
+
+        resolve_rank(rank)  # reject unknown policies at construction
+        self.rank = rank
+        if rank_keep_frac is not None and not 0.0 < rank_keep_frac <= 1.0:
+            raise ValueError(f"rank_keep_frac must lie in (0, 1], "
+                             f"got {rank_keep_frac!r}")
+        self.rank_keep_frac = rank_keep_frac
+        self.rank_model_path = rank_model_path
+        # learned rank-stage session state: the current fitted model and
+        # the cache-stats snapshot its harvest was taken at (warm-session
+        # incremental retrain compares against it; see _ranker_for_run)
+        self._ranker = None
+        self._rank_snapshot = None
         #: Plan-phase accounting of the last parallel phased sweep:
         #: {"groups", "candidates", "cells", "backend"} — the exactly-once
         #: candidate-matrix shipping contract tests/test_dse_engine.py
@@ -456,11 +502,13 @@ class DSEEngine:
                 # the pruning accounting) is populated either way; the
                 # matrices are not shipped anywhere — backend and sampled
                 # scalar certification already ran inside the call
+                ranker, rkf = self._ranker_for_run()
                 groups = plan_design_groups(
                     work_fn, grid, spec.n_chips, max_tp=spec.max_tp,
                     max_pp=spec.max_pp, execution=spec.execution,
                     pricing_backend=self.pricing_backend,
-                    ship_matrix=False, prune=self.prune)
+                    ship_matrix=False, prune=self.prune,
+                    ranker=ranker, rank_keep_frac=rkf)
                 planned = self._finish_plan_groups(groups, len(grid))
         return price_planned(planned, backend=self.pricing_backend)
 
@@ -805,12 +853,13 @@ class DSEEngine:
         from ..search.policy import Observation
 
         cells = [grid[i] for i in indices]
+        ranker, rkf = self._ranker_for_run()
         with self._cache_mode():
             planned = plan_design_cells(
                 work_fn, cells, spec.n_chips, max_tp=spec.max_tp,
                 max_pp=spec.max_pp, execution=spec.execution,
                 pricing_backend=self.pricing_backend, prune=self.prune,
-                certify=certify)
+                ranker=ranker, rank_keep_frac=rkf, certify=certify)
             pts = price_planned(planned, backend=self.pricing_backend)
         live = [i for i, p in zip(indices, planned) if p is not None]
         by_index = dict(zip(live, pts))
@@ -1055,6 +1104,11 @@ class DSEEngine:
         prune_on = self._resolved_prune()
         certify = [prune_on and ti % CERTIFY_EVERY == 0
                    for ti in range(len(groups))]
+        # the parent trains (or refits) the ranker ONCE per sweep and
+        # ships the frozen model with the tasks — every worker of every
+        # transport ranks with the identical model, so results stay
+        # deterministic across fork/spawn/forkserver and worker count
+        ranker, rkf = self._ranker_for_run()
         method = self._start_method()
         if method != "fork" or self._session_pool is not None:
             # non-fork transports — and the warm session pool, whose
@@ -1063,13 +1117,14 @@ class DSEEngine:
             _require_picklable(work_fn)
             payload = [(work_fn, [grid[i] for i in idxs], idxs, spec.n_chips,
                         spec.max_tp, spec.max_pp, spec.execution, ship,
-                        self.prune, cert)
+                        self.prune, ranker, rkf, cert)
                        for idxs, cert in zip(groups, certify)]
             return _plan_group_args, payload, False
         _WORKER_CTX.update(work_fn=work_fn, grid=grid, n_chips=spec.n_chips,
                            max_tp=spec.max_tp, max_pp=spec.max_pp,
                            execution=spec.execution, ship_matrix=ship,
-                           prune=self.prune)
+                           prune=self.prune, ranker=ranker,
+                           rank_keep_frac=rkf)
         return _plan_group_index, list(zip(groups, certify)), True
 
     def _parallel_plan(self, work_fn, spec: SweepSpec, grid
@@ -1156,6 +1211,12 @@ class DSEEngine:
             "scalar_certified_groups": sum(
                 1 for s in pstats if s.get("scalar_certified")),
             "parent_certified_groups": parent_certified,
+            # learned rank stage: ``survived`` keeps its meaning
+            # (dominance survivors); ``rank_survived`` is what actually
+            # got priced when the rank stage ran (== survived otherwise)
+            "rank": any(s.get("ranked") for s in pstats),
+            "rank_survived": sum(s.get("rank_survived", s["survived"])
+                                 for s in pstats),
         }
         return out
 
@@ -1180,6 +1241,53 @@ class DSEEngine:
 
     def _resolved_prune(self) -> bool:
         return resolve_prune(self.prune)
+
+    def _resolved_rank(self) -> bool:
+        from ..learned.rank import resolve_rank
+
+        return resolve_rank(self.rank)
+
+    def _ranker_for_run(self):
+        """``(ranker, keep_frac)`` for the sweep about to run, or
+        ``(None, None)`` when the rank stage is off / must degrade.
+
+        The model is fitted from the memo cache's ``candmat`` harvest
+        (:func:`repro.learned.model.fit_ranker`) the first time a ranked
+        sweep runs and REFITTED only when
+        :meth:`repro.core.memo.SolveCache.diff_stats` shows the harvest
+        gained entries since the last fit — warm service sessions retrain
+        incrementally across requests instead of once per sweep.  When
+        the in-process harvest is below the staleness guard, a persisted
+        model at ``rank_model_path`` (if any) is loaded instead; with
+        neither, the sweep degrades to rank-off — correctness never
+        depends on the model, so degrading is always safe."""
+        if not (self._resolved_rank() and self._resolved_prune()):
+            return None, None
+        from ..learned.model import LearnedModel, fit_ranker
+        from ..learned.rank import rank_keep_frac as _env_keep_frac
+
+        delta = GLOBAL_CACHE.diff_stats(self._rank_snapshot)
+        grew = delta["by_space"].get("candmat", (0, 0, 0))[2] > 0
+        if self._ranker is None or grew:
+            self._rank_snapshot = GLOBAL_CACHE.stats()
+            model = fit_ranker()
+            if model is not None:
+                self._ranker = model
+                if self.rank_model_path:
+                    try:
+                        model.save(self.rank_model_path)
+                    except OSError:
+                        pass  # unwritable path never takes the sweep down
+            elif self._ranker is None and self.rank_model_path:
+                try:
+                    self._ranker = LearnedModel.load(self.rank_model_path)
+                except (OSError, ValueError):
+                    pass  # absent/stale file: degrade, don't die
+        if self._ranker is None:
+            return None, None
+        frac = (self.rank_keep_frac if self.rank_keep_frac is not None
+                else _env_keep_frac())
+        return self._ranker, frac
 
     def _verify_group_winners(self, iter_time, mem,
                               group: PlannedGroup) -> None:
@@ -1272,9 +1380,12 @@ class DSEEngine:
             return cap
 
         t0 = time.perf_counter()
+        ranker, rkf = self._ranker_for_run()
         groups: list[_RepriceGroup] = []
         enumerated = 0
         empty_groups = 0
+        dom_survived = 0
+        rank_survived = 0
         with self._cache_mode():
             for idxs in _group_indices(grid):
                 system = build_system(grid[idxs[0]], spec.n_chips)
@@ -1288,9 +1399,22 @@ class DSEEngine:
                     empty_groups += 1
                     continue
                 caps = tuple(capacity(grid[i][1]) for i in idxs)
-                sel = select_candidates(cands, caps, prune=self.prune)
-                matrix = (cands.pruned(max(caps)).matrix if prune_on
-                          else cands.matrix)
+                rank_ctx = None
+                if ranker is not None:
+                    from ..learned.features import system_features
+
+                    rank_ctx = system_features(system.chip, system.n_chips,
+                                               system.topology.name)
+                sel = select_candidates(cands, caps, prune=self.prune,
+                                        ranker=ranker, rank_keep_frac=rkf,
+                                        rank_context=rank_ctx)
+                dom_survived += sel.stats["survived"]
+                rank_survived += sel.stats["rank_survived"]
+                matrix = (cands.pruned(max(caps), ranker=ranker,
+                                       keep_frac=rkf,
+                                       rank_context=rank_ctx,
+                                       rank_capacities=caps).matrix
+                          if prune_on else cands.matrix)
                 groups.append(_RepriceGroup(matrix, caps, tuple(sel.rows),
                                             sel.survivors))
         plan_s = time.perf_counter() - t0
@@ -1321,6 +1445,9 @@ class DSEEngine:
             "groups": len(groups),
             "empty_groups": empty_groups,
             "enumerated": enumerated,
+            "rank": ranker is not None,
+            "survived": dom_survived,
+            "rank_survived": rank_survived,
             "priced_rows": priced_rows,
             "chunk_rows": chunk,
             "chunks": chunks,
@@ -1339,6 +1466,7 @@ class DSEEngine:
 
     def _serial_iter(self, work_fn, spec: SweepSpec, cells, stop):
         """Lazily stream (index, cell) pairs in order."""
+        ranker, rkf = self._ranker_for_run()
         with self._cache_mode():
             for j, (i, cell) in enumerate(cells):
                 # one cell per planning call: pick the scalar-certify
@@ -1348,7 +1476,7 @@ class DSEEngine:
                     work_fn, [cell], spec.n_chips, max_tp=spec.max_tp,
                     max_pp=spec.max_pp, execution=spec.execution,
                     pricing_backend=self.pricing_backend,
-                    prune=self.prune,
+                    prune=self.prune, ranker=ranker, rank_keep_frac=rkf,
                     certify=j % CERTIFY_EVERY == 0)
                 pts = price_planned(planned, backend=self.pricing_backend)
                 item = SweepItem(i, cell, pts[0] if pts else None)

@@ -220,6 +220,27 @@ class SolveCache:
             by_space={s: (self._hits[s], self._misses[s], sizes[s])
                       for s in spaces})
 
+    def diff_stats(self, before: CacheStats | None) -> dict:
+        """Per-space entry/traffic delta since a :meth:`stats` snapshot
+        (``before=None`` ≡ an empty snapshot).  The incremental-retrain
+        driver of the learned rank stage polls ``["by_space"]["candmat"]``
+        growth between warm-session requests to decide when the harvest
+        gained enough new candidate sets to justify refitting — the
+        in-process analogue of :func:`repro.core.memo_store.diff_stats`
+        for the shared tier."""
+        after = self.stats()
+        if before is None:
+            before = CacheStats(hits=0, misses=0, entries=0, by_space={})
+        by_space = {}
+        for space in set(after.by_space) | set(before.by_space):
+            ah, am, asz = after.by_space.get(space, (0, 0, 0))
+            bh, bm, bsz = before.by_space.get(space, (0, 0, 0))
+            by_space[space] = (ah - bh, am - bm, asz - bsz)
+        return {"hits": after.hits - before.hits,
+                "misses": after.misses - before.misses,
+                "entries": after.entries - before.entries,
+                "by_space": by_space}
+
     def clear(self) -> None:
         self._data.clear()
         self._hits.clear()

@@ -1,0 +1,64 @@
+"""Learned cost model as a certified third pruning stage
+(``repro.learned``).
+
+The DSE pipeline's rank stage (``docs/LEARNED.md``): a ridge regressor
+trained on ``(candidate features → priced iteration time)`` pairs
+harvested from memo space ``"candmat"`` scores every dominance-survivor
+row, and the pipeline prices only the model's calibrated top fraction
+union the rows no pricing-free argument can exclude — winners provably
+identical to the unranked pipeline and re-certified at runtime under the
+house certify-or-die rule.
+
+Public surface:
+
+* :func:`~repro.learned.model.fit_ranker` /
+  :class:`~repro.learned.model.LearnedModel` — training, quantile-
+  calibrated keep-threshold (stated recall target), versioned
+  ``save``/``load`` persistence, the harvest-size staleness guard.
+* :func:`~repro.learned.rank.rank_keep` /
+  :func:`~repro.learned.rank.bound_keep` — the winner-preserving
+  keep rule applied inside
+  :func:`repro.core.interchip.prune_matrix`.
+* :func:`~repro.learned.rank.default_rank` /
+  :func:`~repro.learned.rank.resolve_rank` /
+  :func:`~repro.learned.rank.rank_keep_frac` — the ``DFMODEL_RANK`` /
+  ``DFMODEL_RANK_KEEP_FRAC`` policy knobs (same strict-spelling contract
+  as ``DFMODEL_PRUNE``).
+* :mod:`repro.learned.features` — the feature schema
+  (:data:`~repro.learned.features.FEATURE_NAMES`) and the
+  :func:`~repro.learned.features.harvest_rows` training-set extraction.
+"""
+from .features import (DERIVED_FEATURE_NAMES, FEATURE_NAMES,
+                       SYSTEM_FEATURE_NAMES, TOPOLOGY_VOCAB,
+                       candidate_features, derived_features, harvest_rows,
+                       system_features)
+from .model import (DEFAULT_RECALL_TARGET, FORMAT_VERSION, MIN_TRAIN_GROUPS,
+                    MIN_TRAIN_ROWS, LearnedModel, fit_ranker, rank_keep_count)
+from .rank import (RANK_ENV_VAR, RANK_KEEP_ENV_VAR, RANK_MODES, bound_keep,
+                   default_rank, rank_keep, rank_keep_frac, resolve_rank)
+
+__all__ = [
+    "DEFAULT_RECALL_TARGET",
+    "DERIVED_FEATURE_NAMES",
+    "FEATURE_NAMES",
+    "FORMAT_VERSION",
+    "LearnedModel",
+    "MIN_TRAIN_GROUPS",
+    "MIN_TRAIN_ROWS",
+    "RANK_ENV_VAR",
+    "RANK_KEEP_ENV_VAR",
+    "RANK_MODES",
+    "SYSTEM_FEATURE_NAMES",
+    "TOPOLOGY_VOCAB",
+    "bound_keep",
+    "candidate_features",
+    "default_rank",
+    "derived_features",
+    "fit_ranker",
+    "harvest_rows",
+    "rank_keep",
+    "rank_keep_count",
+    "rank_keep_frac",
+    "resolve_rank",
+    "system_features",
+]

@@ -13,8 +13,8 @@ Public surface:
   denser than the paper's 80 systems.
 * :func:`~repro.search.surrogate.plan_feature_rows` /
   :func:`~repro.search.surrogate.fit_plan_ridge` — the memo-store
-  harvest feeding plan-level surrogates (the ROADMAP's
-  learned-cost-model stepping stone).
+  harvest feeding plan-level surrogates; :mod:`repro.learned` builds
+  the shipped learned rank stage on the same harvest.
 """
 from .grid import DenseGridSpec, ScaledWorkFn, scale_lattice, scaled_name
 from .policy import (POLICY_NAMES, Observation, RandomSearch, SearchContext,

@@ -9,14 +9,22 @@ Two regression surfaces share the ridge machinery here:
   unevaluated cells each round.
 * **plan level** — :func:`plan_feature_rows` harvests the memoised
   candidate sets (memo space ``"candmat"``, via
-  :meth:`repro.core.memo.SolveCache.harvest` — including entries other
-  workers of a shared-store sweep computed) into
+  :meth:`repro.core.memo.SolveCache.harvest`) into
   ``(PlanVector-feature rows → selection iter_time)`` training pairs,
-  and :func:`fit_plan_ridge` fits the same ridge on them.  This is the
-  stepping stone to the ROADMAP's learned-cost-model item: a model that
-  prices a *candidate plan* without the analytical formula.  Each cell
-  observation's target is exactly the minimum of its group's plan-level
-  targets, so the two surfaces are consistent by construction.
+  and :func:`fit_plan_ridge` fits the same ridge on them.  The harvest
+  merges tiers: the local in-process tier first, then shared-store
+  entries other workers of the sweep computed — deduplicated by key
+  with the local entry winning a collision, and shared entries that
+  fail to unpickle (version skew) skipped rather than raised.  Each
+  cell observation's target is exactly the minimum of its group's
+  plan-level targets, so the two surfaces are consistent by
+  construction.
+
+The plan-level harvest is the training feed of the *shipped* learned
+cost model: :mod:`repro.learned` extends these feature rows with an
+Eq. 7-shaped derived basis plus a per-group system block, calibrates a
+keep-threshold, and runs as a certified third pruning stage inside
+``plan_design_groups`` (see ``docs/LEARNED.md``).
 
 Everything is deterministic: the ridge solves closed-form normal
 equations (no iterative optimizer), and the only randomness —
@@ -106,8 +114,11 @@ def plan_feature_rows(cache: SolveCache | None = None
     space ``"candmat"``; each candidate row contributes one training
     pair: its :data:`PLAN_FEATURE_FIELDS` columns and its exact
     ``selection_columns`` iteration time.  With a shared store attached
-    the harvest also covers candidate sets computed by other processes
-    of the sweep (see :meth:`SolveCache.harvest`).
+    the harvest also merges in candidate sets computed by other
+    processes of the sweep — local tier first, shared entries
+    deduplicated against it (see :meth:`SolveCache.harvest`).  The
+    richer-featured variant powering the learned rank stage is
+    :func:`repro.learned.features.harvest_rows`.
     """
     cache = GLOBAL_CACHE if cache is None else cache
     xs, ys = [], []

@@ -31,6 +31,14 @@ Design constraints this encodes:
 rounds (their engine calls are not interruptible); their priced
 observations seed the same result memo, so a later sweep over the same
 cells streams instantly.
+
+The engine-level learned rank stage (``rank=`` / ``$DFMODEL_RANK``, see
+:mod:`repro.learned`) applies to every query the scheduler routes —
+sweeps, searches and reprices all flow through the same plan → rank →
+price pipeline — and because one engine serves all requests, its
+:meth:`~repro.core.dse_engine.DSEEngine._ranker_for_run` refit check
+sees the memo harvest grow across *requests*: a warm daemon's ranker
+improves as clients price new regions of the design space.
 """
 from __future__ import annotations
 

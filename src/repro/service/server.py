@@ -231,6 +231,8 @@ class DSEService:
                        "warm_pool": self.engine._session_pool is not None,
                        "pricing_backend": self.engine.pricing_backend,
                        "prune": self.engine.prune,
+                       "rank": self.engine.rank,
+                       "rank_model": self.engine._ranker is not None,
                        "shared_cache": self.engine.shared_cache},
             "shared_store": store_stats,
             "shared_store_delta": diff_stats(self._store_stats0, store_stats),
@@ -250,6 +252,12 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--backend", default="auto",
                     help="pricing backend (numpy/jax/pallas/pallas-compiled)")
     ap.add_argument("--prune", default="auto", help="candidate pruning policy")
+    ap.add_argument("--rank", default="auto",
+                    help="learned rank-stage policy (on/off/auto; "
+                         "auto follows $DFMODEL_RANK, default off)")
+    ap.add_argument("--rank-model", default=None, metavar="PATH",
+                    help="persist/load the trained ranker at PATH so warm "
+                         "sessions survive daemon restarts")
     ap.add_argument("--batch-cells", type=int, default=8,
                     help="scheduler fairness quota per client per round")
     args = ap.parse_args(argv)
@@ -258,7 +266,9 @@ def main(argv: list[str] | None = None) -> int:
                      max_workers=args.workers,
                      shared_cache=args.shared_cache,
                      pricing_backend=args.backend,
-                     prune=args.prune)
+                     prune=args.prune,
+                     rank=args.rank,
+                     rank_model_path=args.rank_model)
     with svc:
         print(f"dse-service: serving on {svc.path}", flush=True)
         try:

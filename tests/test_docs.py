@@ -4,11 +4,14 @@ Three invariants keep `docs/` from rotting:
 
 * the env-var doctests in `docs/ENV_VARS.md` execute against the real
   parsers (`default_backend` / `resolve_backend` / `default_prune` /
-  `resolve_prune` / `drift_band`), so documented spellings, defaults
-  and error messages cannot drift from the code;
-* every dotted `repro.*` name either doc mentions resolves to a real
-  module (or an attribute of one) — renaming a module without updating
-  the architecture map fails CI;
+  `resolve_prune` / `drift_band` / `default_rank` / `resolve_rank` /
+  `rank_keep_frac`), and the learned rank-stage doctests in
+  `docs/LEARNED.md` execute against the real keep rule, so documented
+  spellings, defaults and error messages cannot drift from the code;
+* every dotted `repro.*` name any doc mentions (`ARCHITECTURE.md`,
+  `ENV_VARS.md`, `LEARNED.md`) resolves to a real module (or an
+  attribute of one) — renaming a module without updating the
+  architecture map fails CI;
 * the `DFMODEL_*` catalogue in `docs/ENV_VARS.md` matches exactly the
   knob names greppable under `src/`, `tools/` and `benchmarks/` — a new
   knob must be documented, a documented knob must still exist.
@@ -30,7 +33,8 @@ MODULE_RE = re.compile(r"\brepro(?:\.\w+)+")
 
 #: env vars the ENV_VARS.md doctests mutate (snapshot/restore around them)
 _DOCTEST_VARS = ("DFMODEL_PRICING_BACKEND", "DFMODEL_PRUNE",
-                 "DFMODEL_DRIFT_BAND")
+                 "DFMODEL_DRIFT_BAND", "DFMODEL_RANK",
+                 "DFMODEL_RANK_KEEP_FRAC")
 
 
 def test_env_vars_doctests_execute():
@@ -89,6 +93,24 @@ def test_env_vars_doc_names_are_fresh():
                if not _resolves(n)]
     assert not missing, (
         f"ENV_VARS.md names things that no longer exist: {missing}")
+
+
+def test_learned_doc_names_are_fresh():
+    text = (DOCS / "LEARNED.md").read_text()
+    names = sorted(set(MODULE_RE.findall(text)))
+    assert len(names) >= 8, "LEARNED.md lost its module names"
+    missing = [n for n in names if not _resolves(n)]
+    assert not missing, (
+        f"LEARNED.md names things that no longer exist: {missing}")
+
+
+def test_learned_doctests_execute():
+    result = doctest.testfile(str(DOCS / "LEARNED.md"),
+                              module_relative=False, verbose=False)
+    assert result.attempted >= 5, "LEARNED.md doctest examples went missing"
+    assert result.failed == 0, (
+        f"{result.failed} of {result.attempted} LEARNED.md doctests "
+        f"failed (see captured stdout)")
 
 
 def _tree_env_vars() -> set[str]:

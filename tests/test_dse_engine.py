@@ -7,10 +7,11 @@ install — the seeded random checks below mirror the property tests in
 test_solver.py for the vectorized minmax ``extra`` path.
 
 The CI matrix re-runs this file with ``DFMODEL_TEST_MP_CONTEXT``
-(fork | spawn | forkserver), ``DFMODEL_TEST_SHARED_CACHE`` (1 | 0) and
-``DFMODEL_TEST_PRUNE`` (1 | 0): engines built through :func:`_engine`
-pick those up, so every pool transport is exercised with the shared
-store and the candidate-pruning stage both on and off.
+(fork | spawn | forkserver), ``DFMODEL_TEST_SHARED_CACHE`` (1 | 0),
+``DFMODEL_TEST_PRUNE`` (1 | 0) and ``DFMODEL_TEST_RANK`` (1 | 0):
+engines built through :func:`_engine` pick those up, so every pool
+transport is exercised with the shared store, the candidate-pruning
+stage and the learned rank stage both on and off.
 """
 from __future__ import annotations
 
@@ -48,6 +49,10 @@ def _engine(**kwargs) -> DSEEngine:
     if env_prune is not None:
         kwargs.setdefault("prune",
                           "off" if env_prune in ("0", "", "off") else "on")
+    env_rank = os.environ.get("DFMODEL_TEST_RANK")
+    if env_rank is not None:
+        kwargs.setdefault("rank",
+                          "off" if env_rank in ("0", "", "off") else "on")
     return DSEEngine(**kwargs)
 
 

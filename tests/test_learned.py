@@ -1,0 +1,237 @@
+"""Learned rank-stage tests: winner preservation of the keep rule
+(seeded property tests against the scalar reference scan), model
+persistence, the staleness guard's degradation to rank-off, the
+certify-or-die check catching a tampered ranker, and the engine-level
+acceptance property — rank-on and rank-off sweeps return identical
+winners on every smoke scenario, serially and across every pool
+transport.
+
+Like test_dse_engine.py these avoid hypothesis so they run on a bare
+install; the seeded random checks below are the property tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import multiprocessing
+
+import numpy as np
+import pytest
+
+from repro.core import DSEEngine, clear_caches
+from repro.core.interchip import scalar_winner_rows
+from repro.core.memo import SolveCache
+from repro.learned import (FEATURE_NAMES, FORMAT_VERSION, LearnedModel,
+                           bound_keep, fit_ranker, rank_keep,
+                           rank_keep_count, resolve_rank)
+from repro.search.surrogate import RidgeModel
+from repro.workloads.scenarios import scenario_names
+
+
+def _random_group(rng, n):
+    """A random candidate group: exact times, valid lower bounds
+    (lb <= iter_time), memory sizes and a few actual capacities."""
+    iter_time = rng.uniform(0.1, 10.0, size=n)
+    iter_lb = iter_time * rng.uniform(0.2, 1.0, size=n)
+    mem = rng.uniform(1.0, 100.0, size=n)
+    caps = rng.uniform(1.0, 120.0, size=int(rng.integers(1, 4)))
+    return iter_time, iter_lb, mem, caps
+
+
+def _synthetic_model(seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(50, len(FEATURE_NAMES)))
+    y = rng.uniform(1.0, 2.0, size=50)
+    return LearnedModel(version=FORMAT_VERSION, feature_names=FEATURE_NAMES,
+                        ridge=RidgeModel.fit(X, y), n_train=50, n_groups=2,
+                        recall_target=0.95, keep_frac=0.2, recall=1.0)
+
+
+# ------------------------- keep-rule properties ------------------------------
+def test_bound_keep_winner_preserving_seeded():
+    """Every per-capacity scalar winner — and the no-feasible fallback
+    row — survives bound_keep, for random groups and capacities."""
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        n = int(rng.integers(1, 40))
+        iter_time, iter_lb, mem, caps = _random_group(rng, n)
+        keep = bound_keep(iter_time, iter_lb, mem, caps)
+        for row in scalar_winner_rows(iter_time, mem, caps):
+            assert row >= 0 and keep[row]
+        assert keep[int(np.argmin(iter_time))]
+
+
+def test_rank_keep_winner_preserving_under_adversarial_scores():
+    """The union rule holds even when the model is maximally wrong
+    (scores = -iter_time ranks the best rows LAST): winners ride in on
+    the bound_keep safety set, and the top-k budget is still honored."""
+    rng = np.random.default_rng(1)
+    for _ in range(200):
+        n = int(rng.integers(1, 40))
+        iter_time, iter_lb, mem, caps = _random_group(rng, n)
+        frac = float(rng.uniform(0.05, 1.0))
+        keep = rank_keep(-iter_time, iter_time, iter_lb, mem, caps, frac)
+        for row in scalar_winner_rows(iter_time, mem, caps):
+            assert keep[row]
+        assert keep.sum() >= rank_keep_count(n, frac) > 0
+        # restricting to the kept rows must reproduce the winners exactly
+        kept = np.flatnonzero(keep)
+        sub = scalar_winner_rows(iter_time[kept], mem[kept], caps)
+        assert [int(kept[r]) for r in sub] == \
+            scalar_winner_rows(iter_time, mem, caps)
+
+
+def test_rank_keep_count_and_policy_parsing():
+    assert rank_keep_count(10, 0.25) == 3   # ceil(2.5)
+    assert rank_keep_count(10, 1.0) == 10
+    assert rank_keep_count(3, 0.01) == 1    # never empty
+    assert resolve_rank(True) is True and resolve_rank("off") is False
+    assert resolve_rank("on") is True
+    with pytest.raises(ValueError, match="rank policy"):
+        resolve_rank("banana")
+
+
+def test_rank_env_parsing(monkeypatch):
+    from repro.learned.rank import default_rank, rank_keep_frac
+    monkeypatch.delenv("DFMODEL_RANK", raising=False)
+    assert default_rank() == "off"          # opt-in: unset means off
+    monkeypatch.setenv("DFMODEL_RANK", "yes")
+    assert default_rank() == "on" and resolve_rank("auto") is True
+    monkeypatch.setenv("DFMODEL_RANK", "sideways")
+    with pytest.raises(ValueError, match="DFMODEL_RANK"):
+        default_rank()
+    monkeypatch.delenv("DFMODEL_RANK_KEEP_FRAC", raising=False)
+    assert rank_keep_frac() is None
+    monkeypatch.setenv("DFMODEL_RANK_KEEP_FRAC", "0.25")
+    assert rank_keep_frac() == 0.25
+    for bad in ("0", "1.5", "frac"):
+        monkeypatch.setenv("DFMODEL_RANK_KEEP_FRAC", bad)
+        with pytest.raises(ValueError, match="DFMODEL_RANK_KEEP_FRAC"):
+            rank_keep_frac()
+
+
+# ------------------------------ persistence ----------------------------------
+def test_model_save_load_roundtrip(tmp_path):
+    model = _synthetic_model()
+    path = str(tmp_path / "ranker.npz")
+    model.save(path)
+    back = LearnedModel.load(path)
+    assert back.fingerprint == model.fingerprint
+    assert back.feature_names == FEATURE_NAMES
+    assert back.keep_frac == model.keep_frac
+    assert back.recall == model.recall and back.n_train == model.n_train
+    X = np.random.default_rng(7).normal(size=(9, len(FEATURE_NAMES)))
+    np.testing.assert_array_equal(back.score(X), model.score(X))
+
+
+def test_model_load_refuses_version_mismatch(tmp_path):
+    model = _synthetic_model()
+    path = str(tmp_path / "ranker.npz")
+    dataclasses.replace(model, version=FORMAT_VERSION + 1).save(path)
+    with pytest.raises(ValueError, match="format version"):
+        LearnedModel.load(path)
+
+
+# ---------------------------- staleness guard --------------------------------
+def test_fit_ranker_staleness_guard_empty_cache():
+    assert fit_ranker(SolveCache()) is None
+
+
+def test_fit_ranker_rejects_bad_recall_target():
+    with pytest.raises(ValueError, match="recall_target"):
+        fit_ranker(SolveCache(), recall_target=1.5)
+
+
+def test_engine_rank_on_degrades_to_off_when_cold():
+    """rank='on' with no harvest yet must not die — it degrades to a
+    plain pruned sweep (stats say so) instead of fitting on nothing."""
+    clear_caches()
+    eng = DSEEngine(parallel=False, prune="on", rank="on")
+    res = eng.sweep_scenario("fft", smoke=True)
+    assert res.points
+    stats = eng.last_plan_stats
+    assert stats["rank"] is False
+    assert stats["rank_survived"] == stats["survived"] == stats["priced"]
+
+
+def test_engine_requires_valid_rank_policy():
+    with pytest.raises(ValueError, match="rank policy"):
+        DSEEngine(rank="banana")
+    with pytest.raises(ValueError):
+        DSEEngine(rank="on", rank_keep_frac=1.5)
+
+
+# ------------------------ certification (tamper test) ------------------------
+def test_certification_catches_ranker_that_drops_winner(monkeypatch):
+    """Certify-or-die for the rank stage itself: a keep rule that drops
+    the true argmin must be caught by the sampled scalar certification
+    inside plan_design_groups, not silently change a winner."""
+    from repro.core.dse import plan_design_groups
+    from repro.workloads.scenarios import get_scenario
+
+    def evil_rank_keep(scores, iter_time, iter_lb, mem, capacities,
+                       keep_frac):
+        keep = np.ones(len(scores), dtype=bool)
+        for row in scalar_winner_rows(iter_time, mem, capacities):
+            if row >= 0:
+                keep[row] = False        # drop every true winner
+        if not keep.any():
+            keep[0] = True               # never ship an empty group
+        return keep
+
+    monkeypatch.setattr("repro.learned.rank.rank_keep", evil_rank_keep)
+    clear_caches()
+    sc = get_scenario("fft", smoke=True)
+    with pytest.raises(RuntimeError, match="not winner-preserving"):
+        plan_design_groups(sc.work_fn, sc.spec.grid(), sc.spec.n_chips,
+                           max_tp=sc.spec.max_tp, max_pp=sc.spec.max_pp,
+                           execution=sc.spec.execution, prune="on",
+                           certify=True, ranker=_synthetic_model(),
+                           rank_keep_frac=0.5)
+    clear_caches()  # tampered candmat views must not leak to later tests
+
+
+# ----------------------- engine acceptance property --------------------------
+def test_rank_on_off_engines_identical_across_all_scenarios():
+    """The rank-stage acceptance property at engine level: with a warm
+    harvest, a rank-on sweep returns DesignPoint rows identical to a
+    rank-off sweep on EVERY smoke scenario, while pricing strictly fewer
+    dominance survivors in aggregate."""
+    clear_caches()
+    warm = DSEEngine(parallel=False, prune="on")
+    for name in scenario_names():
+        warm.sweep_scenario(name, smoke=True)   # build the candmat harvest
+    dom = ranked = 0
+    for name in scenario_names():
+        on = DSEEngine(parallel=False, prune="on", rank="on")
+        res_on = on.sweep_scenario(name, smoke=True)
+        stats = on.last_plan_stats
+        assert stats["rank"] is True, name
+        assert stats["rank_survived"] <= stats["survived"], name
+        dom += stats["survived"]
+        ranked += stats["rank_survived"]
+        off = DSEEngine(parallel=False, prune="on", rank="off")
+        res_off = off.sweep_scenario(name, smoke=True)
+        assert off.last_plan_stats["rank"] is False
+        assert ([p.row() for p in res_on.points]
+                == [p.row() for p in res_off.points]), name
+    assert ranked < dom, "the rank stage never dropped a row anywhere"
+
+
+@pytest.mark.parametrize("ctx", ["fork", "spawn", "forkserver"])
+def test_rank_on_off_identical_across_pool_transports(ctx):
+    """Rank-on winners are identical to the serial rank-off reference
+    under every pool transport: the parent-trained frozen model ships to
+    the workers and ranks deterministically there."""
+    if ctx not in multiprocessing.get_all_start_methods():
+        pytest.skip(f"{ctx} not available on this platform")
+    clear_caches()
+    warm = DSEEngine(parallel=False, prune="on")
+    ref = warm.sweep_scenario("llm", smoke=True)   # harvest + reference
+    eng = DSEEngine(parallel=True, max_workers=2, mp_context=ctx,
+                    pricing_backend="numpy", prune="on", rank="on")
+    res = eng.sweep_scenario("llm", smoke=True)
+    stats = eng.last_plan_stats
+    assert stats["rank"] is True
+    assert stats["rank_survived"] < stats["survived"]
+    assert [p.row() for p in res.points] == [p.row() for p in ref.points]
+    eng.shutdown()

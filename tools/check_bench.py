@@ -57,11 +57,21 @@ Runs the smoke `speedup_report` (the same measurement `benchmarks.run
   and the prune-on engine's points/sec no lower than the prune-off
   engine's divided by $DFMODEL_BENCH_PRUNE_SLACK (default 1.5 — the
   smoke grid is tiny, so per-run scheduler noise dominates; the gate
-  certifies "pruning does not slow the sweep down", not a speedup).
+  certifies "pruning does not slow the sweep down", not a speedup);
+* **learned rank stage** — the report's `learned` block must show the
+  calibrated ranker enabled with `winners_identical` true (rank-on
+  DesignPoint rows reproduce rank-off bit-for-bit on every smoke
+  scenario), the dense-grid pricing-volume shrink over dominance-only
+  (`shrink_vs_dominance`) at least $DFMODEL_BENCH_RANK_SHRINK (default
+  3.0 — the rank stage prices ≤ 1/3 of the dominance survivors), and
+  the model's achieved harvest recall at least its own stated
+  `recall_target` (the calibration must deliver the recall it claims).
 
 Exit 1 on any regression. `--update` rewrites the committed baseline with
 the fresh numbers instead (run it on the machine that owns the baseline
-after a deliberate perf change). `--fresh-out PATH` (or
+after a deliberate perf change); it first runs the tier-1 test suite and
+REFUSES to touch the baseline while any test is red — a baseline
+captured on a broken tree would launder the breakage into CI. `--fresh-out PATH` (or
 $DFMODEL_BENCH_FRESH_OUT) additionally keeps the freshly measured report
 at PATH — CI uploads it as an artifact when the gate fails, so a
 regression can be diffed against the committed baseline offline.
@@ -218,6 +228,46 @@ def _check_service(problems: list[str], fresh: dict, base: dict,
             f"{slowdown:g})")
 
 
+def _check_learned(problems: list[str], fresh: dict,
+                   rank_shrink: float) -> None:
+    """The learned rank-stage gate for the `learned` report block."""
+    entry = fresh.get("learned")
+    if not entry:
+        problems.append("learned block missing: the rank-stage benchmark "
+                        "did not run")
+        return
+    if not entry.get("enabled", False):
+        problems.append("learned.enabled is False: the harvest could not "
+                        "train a ranker (staleness guard tripped on a "
+                        "full smoke-sweep harvest)")
+        return
+    if not entry.get("winners_identical", False):
+        bad = [name for name, e in (entry.get("scenarios") or {}).items()
+               if not e.get("winners_identical", False)]
+        problems.append(
+            f"learned.winners_identical is False "
+            f"(scenarios: {', '.join(bad) or '?'}): rank-on rows no "
+            f"longer reproduce rank-off bit-for-bit")
+    grid = entry.get("grid") or {}
+    if not grid.get("winners_identical", False):
+        problems.append("learned.grid.winners_identical is False: the "
+                        "dense-grid reprice no longer certifies under "
+                        "the rank stage")
+    shrink = entry.get("shrink_vs_dominance", 0.0)
+    if shrink < rank_shrink:
+        problems.append(
+            f"learned dense-grid shrink {shrink:.2f}x over dominance-only "
+            f"< floor {rank_shrink:g}x ({grid.get('rank_survived', 0)} of "
+            f"{grid.get('survived', 0)} dominance survivors priced)")
+    model = entry.get("model") or {}
+    recall = model.get("recall", 0.0)
+    target = model.get("recall_target", 1.0)
+    if recall < target:
+        problems.append(
+            f"learned model recall {recall:.3f} < its stated target "
+            f"{target:g}: the keep-threshold calibration is broken")
+
+
 def compare(fresh: dict, base: dict,
             slowdown: float, min_speedup: float,
             hit_drop: float, shared_min_hits: int = 1,
@@ -227,7 +277,8 @@ def compare(fresh: dict, base: dict,
             grid_min_cells: int = 100_000,
             repriced_max_frac: float = 0.5,
             service_min_speedup: float = 2.0,
-            service_min_dedup: int = 1) -> list[str]:
+            service_min_dedup: int = 1,
+            rank_shrink: float = 3.0) -> list[str]:
     """Return a list of human-readable regression messages (empty = pass)."""
     problems: list[str] = []
     if not fresh.get("rows_identical", False):
@@ -337,7 +388,31 @@ def compare(fresh: dict, base: dict,
     # the warm-daemon service block
     _check_service(problems, fresh, base, slowdown, service_min_speedup,
                    service_min_dedup)
+    # the learned rank-stage block
+    _check_learned(problems, fresh, rank_shrink)
     return problems
+
+
+def _tier1_failure(timeout_s: float = 1800.0) -> str | None:
+    """Run the tier-1 suite; None when green, else a short description.
+
+    Guards `--update`: a bench baseline captured while tests are red
+    would bless a broken tree as the new normal."""
+    import subprocess
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (str(REPO / "src"), env.get("PYTHONPATH")) if p)
+    try:
+        proc = subprocess.run(
+            [sys.executable, "-m", "pytest", "-x", "-q"], cwd=REPO, env=env,
+            capture_output=True, text=True, timeout=timeout_s)
+    except subprocess.TimeoutExpired:
+        return f"tier-1 suite timed out after {timeout_s:g}s"
+    if proc.returncode == 0:
+        return None
+    tail = "\n".join((proc.stdout + proc.stderr).strip().splitlines()[-15:])
+    return f"tier-1 suite exited {proc.returncode}:\n{tail}"
 
 
 def main() -> int:
@@ -370,7 +445,16 @@ def main() -> int:
         "DFMODEL_BENCH_SERVICE_MIN_SPEEDUP", "2.0"))
     service_min_dedup = int(os.environ.get(
         "DFMODEL_BENCH_SERVICE_MIN_DEDUP", "1"))
+    rank_shrink = float(os.environ.get("DFMODEL_BENCH_RANK_SHRINK", "3.0"))
 
+    if args.update:
+        print("bench gate: --update requested; running the tier-1 suite "
+              "first (a red tree must not become the baseline)")
+        failure = _tier1_failure()
+        if failure is not None:
+            print(f"bench gate: REFUSING --update, {failure}",
+                  file=sys.stderr)
+            return 1
     fresh = _fresh_report(args.fresh_out)
     if args.update:
         args.baseline.write_text(json.dumps(fresh, indent=2) + "\n")
@@ -391,7 +475,8 @@ def main() -> int:
                        grid_min_cells=grid_min_cells,
                        repriced_max_frac=repriced_max_frac,
                        service_min_speedup=service_min_speedup,
-                       service_min_dedup=service_min_dedup)
+                       service_min_dedup=service_min_dedup,
+                       rank_shrink=rank_shrink)
     for path, vals in fresh.get("paths", {}).items():
         print(f"  {path:20s} {vals['points_per_s']:10.1f} points/s "
               f"(baseline "
@@ -436,6 +521,16 @@ def main() -> int:
           f"{service.get('dedup_hits', 0)} cross-client dedup hits, "
           f"{service.get('rows_per_s', 0.0):.0f} warm rows/s, winners "
           f"identical: {service.get('winners_identical', False)}")
+    learned = fresh.get("learned") or {}
+    if learned.get("enabled"):
+        lmodel = learned.get("model") or {}
+        print(f"  learned: keep_frac {lmodel.get('keep_frac', 0.0):.3f}, "
+              f"recall {lmodel.get('recall', 0.0):.3f} (target "
+              f"{lmodel.get('recall_target', 0.0):g}), dense-grid shrink "
+              f"{learned.get('shrink_vs_dominance', 0.0):.2f}x, winners "
+              f"identical: {learned.get('winners_identical', False)}")
+    else:
+        print("  learned: disabled (no trainable harvest)")
     if problems:
         print("bench gate: REGRESSION", file=sys.stderr)
         for p in problems:

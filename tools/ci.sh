@@ -32,36 +32,49 @@ gate "tests" env PYTHONPATH=src python -m pytest -x -q
 
 # engine matrix: the DSEEngine + cross-process shared memo store under
 # every pool transport this platform offers, plus a candidate-pruning
-# OFF leg. This local mirror runs the store-ON legs (prune on) and one
-# prune-off leg only — the "tests" gate above already ran the full suite
-# in the default configuration (fork transport, store off, prune on),
-# and these legs run serially here; the workflow's engine-matrix job
-# fans the full transport × store × prune grid out across parallel
+# OFF leg and a learned-rank ON leg. This local mirror runs the store-ON
+# legs (prune on, rank off) plus one prune-off and one rank-on leg only —
+# the "tests" gate above already ran the full suite in the default
+# configuration (fork transport, store off, prune on, rank off), and
+# these legs run serially here; the workflow's engine-matrix job fans
+# the full transport × store × prune × rank grid out across parallel
 # runners.
 for method in fork spawn forkserver; do
     if ! python -c "import multiprocessing as m, sys; \
 sys.exit(0 if '$method' in m.get_all_start_methods() else 1)"; then
-        echo "engine matrix [$method shared=1 prune=1]: SKIP (start method unavailable)"
+        echo "engine matrix [$method shared=1 prune=1 rank=0]: SKIP (start method unavailable)"
         continue
     fi
-    gate "engine matrix [$method shared=1 prune=1]" \
+    gate "engine matrix [$method shared=1 prune=1 rank=0]" \
         env PYTHONPATH=src DFMODEL_TEST_MP_CONTEXT=$method \
             DFMODEL_TEST_SHARED_CACHE=1 DFMODEL_TEST_PRUNE=1 \
+            DFMODEL_TEST_RANK=0 \
             python -m pytest -x -q tests/test_memo_store.py \
-                tests/test_dse_engine.py
+                tests/test_dse_engine.py tests/test_learned.py
 done
 if python -c "import multiprocessing as m, sys; \
 sys.exit(0 if 'fork' in m.get_all_start_methods() else 1)"; then
     # DFMODEL_TEST_PRUNE=0 reshapes _engine-built engines; DFMODEL_PRUNE=off
     # flips every prune="auto" default (sweep, plan_design_groups) too
-    gate "engine matrix [fork shared=1 prune=0]" \
+    gate "engine matrix [fork shared=1 prune=0 rank=0]" \
         env PYTHONPATH=src DFMODEL_TEST_MP_CONTEXT=fork \
             DFMODEL_TEST_SHARED_CACHE=1 DFMODEL_TEST_PRUNE=0 \
-            DFMODEL_PRUNE=off \
+            DFMODEL_TEST_RANK=0 DFMODEL_PRUNE=off \
             python -m pytest -x -q tests/test_memo_store.py \
-                tests/test_dse_engine.py
+                tests/test_dse_engine.py tests/test_learned.py
+    # DFMODEL_TEST_RANK=1 reshapes _engine-built engines; DFMODEL_RANK=on
+    # flips every rank="auto" default too. Correctness must not depend on
+    # the harvest: cold engines degrade to rank-off, warm engines rank
+    # and still certify identical winners.
+    gate "engine matrix [fork shared=1 prune=1 rank=1]" \
+        env PYTHONPATH=src DFMODEL_TEST_MP_CONTEXT=fork \
+            DFMODEL_TEST_SHARED_CACHE=1 DFMODEL_TEST_PRUNE=1 \
+            DFMODEL_TEST_RANK=1 DFMODEL_RANK=on \
+            python -m pytest -x -q tests/test_memo_store.py \
+                tests/test_dse_engine.py tests/test_learned.py
 else
-    echo "engine matrix [fork shared=1 prune=0]: SKIP (start method unavailable)"
+    echo "engine matrix [fork shared=1 prune=0 rank=0]: SKIP (start method unavailable)"
+    echo "engine matrix [fork shared=1 prune=1 rank=1]: SKIP (start method unavailable)"
 fi
 
 # smoke benches: exercises the DSE engine end-to-end (parallel sweep,
