@@ -154,6 +154,20 @@ def evaluate_design_point(work_fn: Callable[[SystemSpec], TrainWorkload],
     return _to_point(work, system, plan, execution)
 
 
+def plan_vector_for(work: TrainWorkload, system: SystemSpec,
+                    plan: InterChipPlan,
+                    execution: str = "auto") -> PlanVector:
+    """The full pricing row for one already-solved plan: runs the intra-chip
+    pass on the plan's per-chip shard and assembles the same
+    :class:`~repro.core.pricing.PlanVector` the phased sweep prices. Public
+    entry point for consumers that hold a single (workload, system, plan)
+    triple — the validation loop feeds the result to
+    :func:`repro.core.pricing.decompose_iter_time` for the per-term
+    modeled-vs-measured comparison."""
+    intra = _intra_refine(work, system, plan, execution)
+    return _plan_vector(work, system, plan, intra)
+
+
 def sweep(work_fn: Callable[[SystemSpec], TrainWorkload],
           n_chips: int = 1024,
           chips: Iterable[str] = DEFAULT_CHIPS,

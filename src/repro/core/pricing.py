@@ -499,6 +499,70 @@ def price_plan_scalar(v: PlanVector) -> dict[str, float]:
     }
 
 
+def decompose_iter_time(v: PlanVector) -> dict[str, float]:
+    """Per-term decomposition of one plan's iteration time (seconds).
+
+    Splits the :func:`price_plan_scalar` ``iter_time`` into additive terms —
+    the validation loop compares each against its measured counterpart
+    rather than only the end-to-end number:
+
+    ``t_compute``
+        arithmetic on the critical stage (steady pipeline rounds), scaled by
+        the intra-chip pass's compute share;
+    ``t_memory``
+        the memory-bound share of the same busy time (0 when no intra-chip
+        pass ran — the inter-chip model alone cannot see memory);
+    ``t_collective``
+        exposed communication: stage network/P2P time that the compute of a
+        round cannot hide, the exposed DP all-reduce, and the intra-chip
+        network share;
+    ``t_bubble``
+        the (pp − 1) pipeline fill/drain rounds.
+
+    The decomposition is exact by construction and certified at runtime:
+    the terms are attributed so that they sum to ``iter_time`` bit-for-bit
+    up to float addition order, and this function raises if they drift
+    beyond 1 part in 10⁹ — the decomposition can never silently disagree
+    with the priced scalar.
+    """
+    t_fwd = max(v.t_comp_stage, v.t_net_stage, v.t_p2p)
+    t_bwd_comp = v.t_comp_stage * v.bwd_flop_mult
+    t_bwd_net = v.t_net_stage * (v.bwd_flop_mult * v.bwd_comm_mult)
+    t_bwd = max(t_bwd_comp, t_bwd_net, v.t_p2p)
+    exposed_dp = max(0.0, v.t_dp - v.n_micro * t_bwd_comp * 0.5)
+    iter_time = (v.n_micro + v.pp - 1.0) * (t_fwd + t_bwd) + exposed_dp
+
+    # steady rounds: compute is attributed first; whatever of the round it
+    # cannot cover is exposed communication
+    comp_round = min(v.t_comp_stage, t_fwd) + min(t_bwd_comp, t_bwd)
+    net_round = (t_fwd + t_bwd) - comp_round
+    busy = v.n_micro * comp_round
+    t_bubble = (v.pp - 1.0) * (t_fwd + t_bwd)
+
+    total_intra = v.intra_comp + v.intra_mem + v.intra_net
+    if total_intra > 0.0:
+        t_compute = busy * (v.intra_comp / total_intra)
+        t_memory = busy * (v.intra_mem / total_intra)
+        intra_net = busy * (v.intra_net / total_intra)
+    else:
+        t_compute, t_memory, intra_net = busy, 0.0, 0.0
+    t_collective = v.n_micro * net_round + exposed_dp + intra_net
+
+    out = {
+        "t_compute": t_compute,
+        "t_memory": t_memory,
+        "t_collective": t_collective,
+        "t_bubble": t_bubble,
+        "iter_time": iter_time,
+    }
+    resum = t_compute + t_memory + t_collective + t_bubble
+    if abs(resum - iter_time) > 1e-9 * max(iter_time, 1e-300):
+        raise AssertionError(
+            f"iter-time decomposition drifted: terms sum to {resum!r}, "
+            f"priced iter_time is {iter_time!r}")
+    return out
+
+
 # --- batched roofline (Fig 18 / dry-run terms over many cells) ---------------
 def _roofline(xp, c: Mapping[str, object]) -> dict[str, object]:
     t_compute = c["hlo_flops"] / (c["chips"] * c["peak_flops"])

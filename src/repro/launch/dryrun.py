@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
 
 For each cell this produces (no device allocation — ShapeDtypeStruct inputs):
@@ -15,8 +12,18 @@ Results are cached as JSON under results/dryrun/ so the sweep is resumable.
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch olmo_1b --shape train_4k
   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--single-pod]
+
+The production meshes need 512 placeholder CPU devices; ``main`` installs
+the XLA flag before jax initializes its backend. In-process callers of
+:func:`run_dryrun` / :func:`run_cell` must do the same *before anything
+touches jax* (the flag is inert once the backend exists) — importing this
+module deliberately no longer mutates the environment, so importers that
+never lower a production mesh keep their real device count.
 """
+from __future__ import annotations
+
 import argparse
+import os
 import gzip
 import json
 import pathlib
@@ -224,7 +231,35 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     return result
 
 
+def run_dryrun(targets: list[tuple[str, str]], pods: list[bool] | None = None,
+               force: bool = False, **cell_opts) -> list[dict]:
+    """Importable sweep body: run every (arch, shape) target across the
+    requested pod settings, collecting per-cell results (a failing cell
+    records its error and the sweep continues — same contract as the CLI).
+    ``cell_opts`` forward to :func:`run_cell` (fsdp/remat/accum/...)."""
+    results: list[dict] = []
+    for mp in (pods if pods is not None else [False]):
+        for arch, shp in targets:
+            try:
+                r = run_cell(arch, shp, mp, force=force, **cell_opts)
+                rf = r["roofline"]
+                print(f"[OK ] {arch:22s} {shp:12s} pod{2 if mp else 1} "
+                      f"compile={r['compile_s']:.1f}s "
+                      f"dom={rf['dominant']:10s} "
+                      f"tbound={max(rf['t_compute_s'], rf['t_memory_s'], rf['t_collective_s']):.4f}s "
+                      f"frac={rf['roofline_fraction']:.3f}", flush=True)
+            except Exception as e:
+                print(f"[FAIL] {arch} {shp} pod{2 if mp else 1}: {e}",
+                      flush=True)
+                r = {"arch": arch, "shape": shp, "multi_pod": mp,
+                     "error": str(e)}
+            results.append(r)
+    return results
+
+
 def main():
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=512")
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS)
     ap.add_argument("--shape", choices=list(SHAPES))
@@ -267,27 +302,11 @@ def main():
     else:
         targets.append((args.arch, args.shape))
 
-    for mp in pods:
-        for arch, shp in targets:
-            t0 = time.time()
-            try:
-                r = run_cell(arch, shp, mp, force=args.force,
-                             fsdp=args.fsdp, remat=args.remat,
-                             moe_dispatch=args.moe_dispatch,
-                             accum=args.accum,
-                             kv_replicate=args.kv_replicate,
-                             bf16_params=args.bf16_params,
-                             bf16_ar=args.bf16_ar,
-                             cp_decode=args.cp_decode)
-                rf = r["roofline"]
-                print(f"[OK ] {arch:22s} {shp:12s} pod{2 if mp else 1} "
-                      f"compile={r['compile_s']:.1f}s "
-                      f"dom={rf['dominant']:10s} "
-                      f"tbound={max(rf['t_compute_s'], rf['t_memory_s'], rf['t_collective_s']):.4f}s "
-                      f"frac={rf['roofline_fraction']:.3f}", flush=True)
-            except Exception as e:
-                print(f"[FAIL] {arch} {shp} pod{2 if mp else 1}: {e}",
-                      flush=True)
+    run_dryrun(targets, pods=pods, force=args.force,
+               fsdp=args.fsdp, remat=args.remat,
+               moe_dispatch=args.moe_dispatch, accum=args.accum,
+               kv_replicate=args.kv_replicate, bf16_params=args.bf16_params,
+               bf16_ar=args.bf16_ar, cp_decode=args.cp_decode)
 
 
 if __name__ == "__main__":

@@ -321,6 +321,8 @@ def _fill_cache(cfg: ModelConfig, params: dict, tokens: jax.Array,
     """Recompute per-layer inputs and write K/V + SSM states into the cache."""
     compute_dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
     x = params["embed"][tokens].astype(compute_dtype)
+    if memory is not None:
+        memory = memory.astype(compute_dtype)
     pos = jnp.arange(tokens.shape[1])
     _, norm = L.make_norm(cfg)
     spec = cache_spec(cfg)

@@ -1,0 +1,32 @@
+"""Modeled-vs-measured validation loop.
+
+One contract, two halves: :mod:`repro.validation.cases` pairs each smoke
+serving scenario's analytical workload with its certified executable twin;
+:mod:`repro.validation.measure` runs the twin (HLO dry-run counts and
+steady-state wall clock); :mod:`repro.validation.report` compares the two
+under declared error bands and persists ``BENCH_validation.json`` for the
+``tools/check_validation.py`` gate.
+
+The cases/report halves are numpy-only — importable (and gateable) on
+CPU-only CI with no jax; everything that needs jax lives behind function
+bodies in :mod:`repro.validation.measure`.
+"""
+from .cases import (CASE_NAMES, ValidationCase, build_case, host_system,
+                    predict_case, validation_cases)
+from .measure import (HostCalibration, calibrate_host, have_jax,
+                      measure_dryrun, measure_wallclock, trimmed_mean,
+                      validation_repeats, validation_warmup)
+from .report import (REPORT_PATH, build_case_report, bytes_factor,
+                     check_case, check_report, hybrid_step_time, load_report,
+                     validation_band, wall_band, write_report)
+
+__all__ = [
+    "CASE_NAMES", "ValidationCase", "build_case", "host_system",
+    "predict_case", "validation_cases",
+    "HostCalibration", "calibrate_host", "have_jax", "measure_dryrun",
+    "measure_wallclock", "trimmed_mean", "validation_repeats",
+    "validation_warmup",
+    "REPORT_PATH", "build_case_report", "bytes_factor", "check_case",
+    "check_report", "hybrid_step_time", "load_report", "validation_band",
+    "wall_band", "write_report",
+]

@@ -1,0 +1,210 @@
+"""Measurement channels for the validation loop.
+
+Two channels, different trust models:
+
+* **dry-run** — lower + compile the twin's decode step (ShapeDtypeStruct
+  inputs, no device arrays) and count FLOPs / bytes / collective link
+  bytes from the optimized HLO via `repro.launch.hlocost`. Deterministic,
+  machine-independent, meaningful on CPU-only CI — this is the channel the
+  gate *requires*.
+* **wall-clock** — run the twin for real on a `ServeEngine` and time
+  steady-state decode steps (warmup discarded, per-step sync, trimmed
+  mean). Only meaningful where the machine is quiet; the gate applies
+  generous declared bands and records exact ratios.
+
+Both protocols are env-tunable (`DFMODEL_VALIDATION_REPEATS`,
+`DFMODEL_VALIDATION_WARMUP`) so CI and a quiet workstation can use the
+same entry points at different fidelities.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+import time
+
+from .cases import ValidationCase
+
+REPEATS_ENV_VAR = "DFMODEL_VALIDATION_REPEATS"
+WARMUP_ENV_VAR = "DFMODEL_VALIDATION_WARMUP"
+
+DEFAULT_REPEATS = 16
+DEFAULT_WARMUP = 2
+
+
+def _int_env(var: str, default: int, lo: int, hi: int) -> int:
+    env = os.environ.get(var, "").strip()
+    if not env:
+        return default
+    try:
+        val = int(env)
+    except ValueError:
+        raise ValueError(
+            f"invalid {var} value {env!r}; expected an integer") from None
+    if not (lo <= val <= hi):
+        raise ValueError(f"{var} must lie in [{lo}, {hi}], got {val}")
+    return val
+
+
+def validation_repeats() -> int:
+    """Timed steady-state decode steps per case:
+    ``$DFMODEL_VALIDATION_REPEATS`` (validated), else
+    :data:`DEFAULT_REPEATS`."""
+    return _int_env(REPEATS_ENV_VAR, DEFAULT_REPEATS, 1, 10_000)
+
+
+def validation_warmup() -> int:
+    """Discarded decode steps before timing starts:
+    ``$DFMODEL_VALIDATION_WARMUP`` (validated), else
+    :data:`DEFAULT_WARMUP`."""
+    return _int_env(WARMUP_ENV_VAR, DEFAULT_WARMUP, 0, 10_000)
+
+
+def trimmed_mean(xs: list[float], trim: float = 0.2) -> float:
+    """Mean of the central (1 − 2·trim) fraction — the repeat protocol's
+    noise-robust location estimate (GC pauses and scheduler preemption
+    land in the discarded tails)."""
+    if not xs:
+        raise ValueError("trimmed_mean of an empty sample")
+    ordered = sorted(xs)
+    k = int(len(ordered) * trim)
+    kept = ordered[k:len(ordered) - k] or ordered
+    return sum(kept) / len(kept)
+
+
+def have_jax() -> bool:
+    try:
+        import jax  # noqa: F401
+    except Exception:
+        return False
+    return True
+
+
+# --- dry-run channel ---------------------------------------------------------
+def measure_dryrun(case: ValidationCase) -> dict:
+    """Lower + compile the twin's decode step and price the optimized HLO.
+
+    Per-decode-step quantities, counted by the same trip-count-aware cost
+    model (`repro.launch.hlocost.analyze`) the TPU dry-run uses — the
+    validation loop is exactly the dryrun pipeline pointed back at the
+    analytical model.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from ..launch import hlocost
+    from ..models import decode_step, init_cache, init_params
+
+    twin = case.twin
+    cfg = twin.cfg
+    pspec = jax.eval_shape(lambda k: init_params(cfg, k),
+                           jax.ShapeDtypeStruct((2,), jnp.uint32))
+    cache = jax.eval_shape(lambda: init_cache(cfg, twin.batch, twin.kv_len))
+    tok = jax.ShapeDtypeStruct((twin.batch,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    step = jax.jit(lambda p, c, t, q: decode_step(cfg, p, c, t, q,
+                                                  memory=None))
+    t0 = time.perf_counter()
+    compiled = step.lower(pspec, cache, tok, pos).compile()
+    summary = hlocost.analyze(compiled.as_text())
+    return {
+        "flops": summary.flops,
+        "bytes": summary.bytes_accessed,
+        "collective_bytes": summary.link_traffic_bytes,
+        "collective_by_kind": dict(summary.collective_bytes),
+        "compile_s": time.perf_counter() - t0,
+    }
+
+
+# --- host calibration --------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class HostCalibration:
+    """Measured effective rates of the machine running the wall-clock
+    channel — the roofline constants of the one-chip host system."""
+
+    flop_rate: float             # effective bf16 matmul FLOP/s
+    mem_bw: float                # effective stream bandwidth, bytes/s
+
+
+_CALIBRATION: HostCalibration | None = None
+
+
+def calibrate_host(force: bool = False) -> HostCalibration:
+    """Measure the host's effective matmul FLOP/s and stream bandwidth
+    (best of 5, jitted, synced). Cached per process — calibration costs
+    seconds and the answer doesn't change under us."""
+    global _CALIBRATION
+    if _CALIBRATION is not None and not force:
+        return _CALIBRATION
+    import jax
+    import jax.numpy as jnp
+
+    n = 2048
+    a = jnp.ones((n, n), jnp.bfloat16)
+    b = jnp.ones((n, n), jnp.bfloat16)
+    mm = jax.jit(lambda x, y: x @ y)
+    mm(a, b).block_until_ready()
+    best = math.inf
+    for _ in range(5):
+        t0 = time.perf_counter()
+        mm(a, b).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    flop_rate = 2.0 * n**3 / best
+
+    big = jnp.ones((64 * 1024 * 1024,), jnp.float32)      # 256 MB
+    stream = jax.jit(lambda v: v * 1.000001)
+    stream(big).block_until_ready()
+    best = math.inf
+    for _ in range(5):
+        t0 = time.perf_counter()
+        stream(big).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    mem_bw = 2.0 * big.nbytes / best                      # read + write
+
+    _CALIBRATION = HostCalibration(flop_rate=flop_rate, mem_bw=mem_bw)
+    return _CALIBRATION
+
+
+# --- wall-clock channel ------------------------------------------------------
+def measure_wallclock(case: ValidationCase, repeats: int | None = None,
+                      warmup: int | None = None, seed: int = 0) -> dict:
+    """Run the twin on a real ``ServeEngine`` and time steady-state decode.
+
+    Protocol: prefill once, discard ``warmup`` decode steps, then time
+    ``repeats`` individually-synced steps; TPOT is the 20 %-trimmed mean.
+    The engine's cache is ``kv_len`` slots, and slot attention always runs
+    over the full cache, so a short measurement prompt still exercises the
+    full modeled KV traffic.
+    """
+    import jax
+
+    from ..models import init_params
+    from ..serve.engine import ServeEngine
+
+    repeats = validation_repeats() if repeats is None else repeats
+    warmup = validation_warmup() if warmup is None else warmup
+    twin = case.twin
+    window = twin.prompt_len + warmup + repeats + 1
+    if window > twin.kv_len:
+        raise ValueError(
+            f"case {case.name!r}: measurement window {window} exceeds the "
+            f"twin's kv_len {twin.kv_len}; lower "
+            f"{REPEATS_ENV_VAR}/{WARMUP_ENV_VAR}")
+    params = init_params(twin.cfg, jax.random.PRNGKey(seed))
+    engine = ServeEngine(twin.cfg, params, max_batch=twin.batch,
+                         max_len=twin.kv_len)
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(seed + 1), (twin.batch, twin.prompt_len),
+        0, twin.cfg.vocab)
+    timing = engine.decode_steady(prompts, n_steps=repeats, warmup=warmup)
+    tpot = trimmed_mean(timing.step_times)
+    return {
+        "tpot": tpot,
+        "tpot_mean": timing.tpot,
+        "ttft": timing.ttft,
+        "tokens_per_s": twin.batch / tpot,
+        "repeats": repeats,
+        "warmup": warmup,
+        "step_time_min": min(timing.step_times),
+        "step_time_max": max(timing.step_times),
+    }

@@ -267,7 +267,7 @@ def mamba_workload(s: LLMShape, global_batch: int, microbatch: int = 1,
 
 
 def decode_workload(s: LLMShape, kv_len: int, global_batch: int,
-                    microbatch: int = 1):
+                    microbatch: int = 1, lm_head: bool = False):
     """Serving/decode-phase workload: one token per request against a
     ``kv_len`` KV cache, ``microbatch`` requests per pipeline microbatch.
 
@@ -275,15 +275,47 @@ def decode_workload(s: LLMShape, kv_len: int, global_batch: int,
     optimizer state, and no DP gradient all-reduce — DP replicas serve
     disjoint request streams. ``global_batch`` is the number of requests
     per 'iteration' (one decode step across the serving batch).
+
+    ``lm_head=True`` adds the embedding/LM-head blocks at one token per
+    request — the executable decode step runs them every step, and for
+    small-vocab-dominated shapes the head is comparable to all layers
+    combined, so validation against measured execution must include it.
     """
     from ..core.interchip import TrainWorkload
     ms = dataclasses.replace(s, batch=microbatch)
+    tok = dataclasses.replace(s, batch=microbatch, seq=1)
     return TrainWorkload(
         name=f"{s.name}_decode",
         layer_graph=decode_layer_graph(ms, kv_len),
         n_layers=s.n_layers,
         global_batch=global_batch,
         microbatch=microbatch,
+        pre_graph=embedding_graph(tok) if lm_head else None,
+        post_graph=lm_head_graph(tok) if lm_head else None,
+        bwd_flop_mult=0.0,
+        bwd_comm_mult=0.0,
+        optimizer_bytes_per_param_byte=0.0,
+        dp_allreduce=False,
+    )
+
+
+def mamba_decode_workload(s: LLMShape, global_batch: int,
+                          microbatch: int = 1, d_state: int = 128,
+                          expand: int = 2, lm_head: bool = False):
+    """Mamba2/SSD decode workload: one token per request, recurrent state
+    instead of a KV cache (the per-step SSD cost is ``seq``-independent, so
+    the seq=1 layer graph *is* the decode graph). Same inference-only
+    semantics as :func:`decode_workload`."""
+    from ..core.interchip import TrainWorkload
+    tok = dataclasses.replace(s, batch=microbatch, seq=1)
+    return TrainWorkload(
+        name=f"{s.name}_decode",
+        layer_graph=mamba_layer_graph(tok, d_state=d_state, expand=expand),
+        n_layers=s.n_layers,
+        global_batch=global_batch,
+        microbatch=microbatch,
+        pre_graph=embedding_graph(tok) if lm_head else None,
+        post_graph=lm_head_graph(tok) if lm_head else None,
         bwd_flop_mult=0.0,
         bwd_comm_mult=0.0,
         optimizer_bytes_per_param_byte=0.0,

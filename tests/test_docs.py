@@ -34,7 +34,10 @@ MODULE_RE = re.compile(r"\brepro(?:\.\w+)+")
 #: env vars the ENV_VARS.md doctests mutate (snapshot/restore around them)
 _DOCTEST_VARS = ("DFMODEL_PRICING_BACKEND", "DFMODEL_PRUNE",
                  "DFMODEL_DRIFT_BAND", "DFMODEL_RANK",
-                 "DFMODEL_RANK_KEEP_FRAC")
+                 "DFMODEL_RANK_KEEP_FRAC", "DFMODEL_VALIDATION_REPEATS",
+                 "DFMODEL_VALIDATION_WARMUP", "DFMODEL_VALIDATION_BAND",
+                 "DFMODEL_VALIDATION_BYTES_FACTOR",
+                 "DFMODEL_VALIDATION_WALL_BAND")
 
 
 def test_env_vars_doctests_execute():

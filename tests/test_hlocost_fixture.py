@@ -1,0 +1,123 @@
+"""hlocost against a committed canned HLO module — exact, no jax.
+
+`tests/data/canned_decode.hlo` is hand-written to exercise every pricing
+path with hand-computable answers: trip-count-scaled while bodies (one
+nested pair — multipliers must compound), fusion boundary pricing (body
+FLOPs through `calls=`, bytes at the boundary only, memoized across the
+second fusion of the same body), dot contracting-dim FLOPs, and all five
+collective kinds under both `replica_groups` spellings. Every assert below
+is an exact arithmetic identity derived next to it — if the parser or the
+cost model drifts, the number names the broken path.
+"""
+from __future__ import annotations
+
+import pathlib
+
+from repro.launch import hlocost
+
+FIXTURE = pathlib.Path(__file__).parent / "data" / "canned_decode.hlo"
+
+# hand-derived constants of the canned module ---------------------------------
+DOT_FLOPS = 2 * 64 * 64 * 64          # out 64x64, contracted dim 64
+FUSION_FLOPS = 32 * 32 + 32 * 32      # multiply + add over bf16[32,32]
+AR_PAYLOAD = 64 * 64 * 4              # f32[64,64] all-reduce operand
+RES_PAYLOAD = 64 * 64 * 4             # f32[64,64] entry-level operands
+AG_PAYLOAD = 32 * 32 * 2              # bf16[32,32] all-gather operand
+
+
+def _summary() -> hlocost.CostSummary:
+    return hlocost.analyze(FIXTURE.read_text())
+
+
+def test_trip_counts_recorded_in_walk_order():
+    s = _summary()
+    assert s.while_trip_counts == [5, 4, 3]
+
+
+def test_flops_exact_with_nested_trip_scaling():
+    s = _summary()
+    want = (
+        DOT_FLOPS * 5            # dot in the 5-trip loop body
+        + 1 * 5                  # scalar add in that body
+        + 1 * 4                  # scalar add in the 4-trip outer body
+        + 1 * (4 * 3)            # scalar add in the nested 3-trip body
+        + 16 * (4 * 3)           # f32[16] multiply in the nested body
+        + FUSION_FLOPS * 2       # two fusions of the same body (memo path)
+    )
+    assert s.flops == want
+
+
+def test_fusion_priced_at_boundary_only():
+    """Fusion bytes are operand+result at the call site; the interior
+    multiply/add tensors are fused away and must not be charged."""
+    s = _summary()
+    boundary = 32 * 32 * 2 + 32 * 32 * 2       # bf16 operand + bf16 result
+    assert s.bytes_by_opcode["fusion"] == boundary * 2
+
+
+def test_dot_bytes_scaled_by_trips():
+    s = _summary()
+    per_trip = 3 * 64 * 64 * 4                 # two operands + result, f32
+    assert s.bytes_by_opcode["dot"] == per_trip * 5
+
+
+def test_collective_link_bytes_per_kind_exact():
+    """Ring-algorithm link terms: AG s·(S-1), AR 2n(S-1)/S, RS/A2A
+    n(S-1)/S, permute n — with the all-reduce inside the 5-trip loop."""
+    s = _summary()
+    assert s.collective_bytes == {
+        "all-reduce": 2.0 * AR_PAYLOAD * (4 - 1) / 4 * 5,
+        "all-gather": AG_PAYLOAD * (4 - 1),
+        "reduce-scatter": RES_PAYLOAD * (2 - 1) / 2,
+        "all-to-all": RES_PAYLOAD * (8 - 1) / 8,
+        "collective-permute": RES_PAYLOAD,      # participants=1 special case
+    }
+    assert s.link_traffic_bytes == sum(s.collective_bytes.values())
+
+
+def test_participants_from_both_replica_group_spellings():
+    s = _summary()
+    by_kind = {r.kind: r for r in s.collectives}
+    assert by_kind["all-gather"].participants == 4      # [2,4]<= iota form
+    assert by_kind["all-reduce"].participants == 4      # {{0,1,2,3}} list
+    assert by_kind["reduce-scatter"].participants == 2
+    assert by_kind["all-to-all"].participants == 8
+    assert by_kind["all-reduce"].trips == 5
+    assert len(s.collectives) == 5
+
+
+def test_total_bytes_accessed_exact():
+    s = _summary()
+    want = (
+        3 * 64 * 64 * 4 * 5                    # dot: 2 operands + result, x5
+        + AR_PAYLOAD * 5                       # all-reduce payload, x5
+        + 12 * 5 + 12 * 4 + 12 * 12            # the three scalar adds
+        + (3 * 16 * 4) * 12                    # nested f32[16] multiply
+        + 9 * 5 + 9 * 4 + 9 * 12               # the three loop compares
+        + (32 * 32 * 2 * 2) * 2                # two fusion boundaries
+        + AG_PAYLOAD + RES_PAYLOAD * 3         # entry collective payloads
+    )
+    assert s.bytes_accessed == want
+
+
+def test_trip_count_rescale_shifts_only_loop_costs():
+    """Doubling one loop's annotated trip count must add exactly that
+    loop's per-trip cost — nothing outside the loop may move."""
+    text = FIXTURE.read_text()
+    base = hlocost.analyze(text)
+    bumped = hlocost.analyze(text.replace('{"n":"5"}', '{"n":"6"}'))
+    assert bumped.flops - base.flops == DOT_FLOPS + 1
+    assert bumped.while_trip_counts == [6, 4, 3]
+    assert (bumped.collective_bytes["all-reduce"]
+            - base.collective_bytes["all-reduce"]
+            ) == 2.0 * AR_PAYLOAD * (4 - 1) / 4
+    for kind in ("all-gather", "reduce-scatter", "all-to-all",
+                 "collective-permute"):
+        assert bumped.collective_bytes[kind] == base.collective_bytes[kind]
+
+
+def test_collective_schedule_sorted_by_link_traffic():
+    sched = hlocost.collective_schedule(_summary())
+    assert sched[0]["kind"] == "all-reduce"    # 122880 link bytes dominates
+    totals = [row["total_link_bytes"] for row in sched]
+    assert totals == sorted(totals, reverse=True)

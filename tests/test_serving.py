@@ -135,3 +135,100 @@ def test_specdecode_large_draft_model_overhead():
     t8 = speculative_throughput(1e-3, tv, window=4, acceptance=0.8)
     t70 = speculative_throughput(8e-3, tv, window=4, acceptance=0.9)
     assert t8 > t70
+
+
+# ------------------------------ timing + window guards ------------------------
+def test_decode_steady_timing_fields():
+    cfg = get_config("olmo_1b", smoke=True)
+    params = init_params(cfg, KEY)
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=64)
+    prompts = jax.random.randint(KEY, (2, 8), 0, cfg.vocab)
+    t = eng.decode_steady(prompts, n_steps=3, warmup=1)
+    assert t.ttft > 0 and t.warmup == 1 and t.batch == 2
+    assert len(t.step_times) == 3 and all(s > 0 for s in t.step_times)
+    assert t.tpot == pytest.approx(sum(t.step_times) / 3)
+    assert t.tokens_per_s == pytest.approx(2 / t.tpot)
+
+
+def test_generate_window_overflow_raises():
+    """Overflowing the KV cache must be a loud ValueError, not a silent
+    out-of-range `.at[].set` drop."""
+    cfg = get_config("olmo_1b", smoke=True)
+    params = init_params(cfg, KEY)
+    eng = ServeEngine(cfg, params, max_batch=1, max_len=16)
+    prompts = jax.random.randint(KEY, (1, 8), 0, cfg.vocab)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.generate(prompts, n_tokens=9)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.decode_steady(prompts, n_steps=8, warmup=0)
+    # the largest window that fits must not raise
+    eng.generate(prompts, n_tokens=8)
+
+
+def test_memory_threads_both_jitted_paths():
+    """The cross-attention memory operand must reach the prefill AND the
+    decode jitted functions — a dropped operand leaves logits unchanged."""
+    cfg = get_config("llama32_vision_11b", smoke=True)
+    params = init_params(cfg, KEY)
+    eng = ServeEngine(cfg, params, max_batch=1, max_len=32)
+    prompts = jax.random.randint(KEY, (1, 4), 0, cfg.vocab)
+    m1 = jnp.zeros((1, cfg.n_image_tokens, cfg.d_model))
+    m2 = jnp.ones((1, cfg.n_image_tokens, cfg.d_model))
+    pre1, cache1 = eng._prefill(params, prompts, m1)
+    pre2, _ = eng._prefill(params, prompts, m2)
+    assert not jnp.allclose(pre1, pre2)
+    cache = eng._rehome(cache1, 1, 4)
+    tok = jnp.argmax(pre1[:, -1], -1).astype(jnp.int32)
+    dec1, _ = eng._decode(params, cache, tok, jnp.int32(4), m1)
+    dec2, _ = eng._decode(params, cache, tok, jnp.int32(4), m2)
+    assert not jnp.allclose(dec1, dec2)
+    # and the end-to-end driver accepts it
+    res = eng.generate(prompts, n_tokens=3, memory=m1)
+    assert len(res.tokens) == 3
+
+
+# ------------------------------ sampling determinism --------------------------
+def test_sampled_generation_seeded_deterministic():
+    cfg = get_config("olmo_1b", smoke=True)
+    params = init_params(cfg, KEY)
+    eng = ServeEngine(cfg, params, max_batch=1, max_len=48)
+    prompts = jax.random.randint(jax.random.PRNGKey(7), (1, 8), 0, cfg.vocab)
+    kw = dict(n_tokens=8, temperature=1.0)
+    a = eng.generate(prompts, rng=jax.random.PRNGKey(11), **kw)
+    b = eng.generate(prompts, rng=jax.random.PRNGKey(11), **kw)
+    assert a.tokens == b.tokens
+    c = eng.generate(prompts, rng=jax.random.PRNGKey(12), **kw)
+    assert c.tokens != a.tokens
+    # per-step subkeys: a sampled run must not emit one token forever
+    # (the degenerate fixed-key bug this engine refactor removed)
+    flat = [t[0] for t in a.tokens]
+    assert len(set(flat)) > 1
+
+
+def test_sampling_without_rng_degrades_to_greedy():
+    cfg = get_config("olmo_1b", smoke=True)
+    params = init_params(cfg, KEY)
+    eng = ServeEngine(cfg, params, max_batch=1, max_len=32)
+    prompts = jax.random.randint(KEY, (1, 8), 0, cfg.vocab)
+    hot = eng.generate(prompts, n_tokens=4, temperature=1.0, rng=None)
+    cold = eng.generate(prompts, n_tokens=4)
+    assert hot.tokens == cold.tokens
+
+
+# ------------------------------ executable spec decode ------------------------
+def test_specdecode_self_draft_bit_identical_to_greedy():
+    """With the target as its own draft every proposal is accepted and the
+    speculative stream must equal plain greedy decoding bit-for-bit."""
+    from repro.serve.specdecode import speculative_generate
+    cfg = get_config("olmo_1b", smoke=True)
+    params = init_params(cfg, KEY)
+    eng = ServeEngine(cfg, params, max_batch=1, max_len=48)
+    prompts = jax.random.randint(jax.random.PRNGKey(5), (1, 8), 0, cfg.vocab)
+    n = 8
+    plain = [t[0] for t in eng.generate(prompts, n_tokens=n).tokens]
+    spec, rate, target_calls = speculative_generate(
+        cfg, params, cfg, params, prompts, n_tokens=n, window=4)
+    assert spec == plain
+    assert rate == pytest.approx(1.0)
+    # window-4 self-drafting emits 5 tokens per target call
+    assert target_calls < n

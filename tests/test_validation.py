@@ -1,0 +1,240 @@
+"""Validation subsystem: twin correspondence, predictions, bands, gate.
+
+Everything up to the jax-marked block is numpy-only — the same surface the
+CPU-only CI leg gates on. The jax block runs the cheap twin (mamba2)
+through both real measurement channels end-to-end.
+"""
+from __future__ import annotations
+
+import json
+import math
+
+import pytest
+
+from repro.validation import (CASE_NAMES, REPORT_PATH, build_case,
+                              build_case_report, check_case, check_report,
+                              hybrid_step_time, load_report, predict_case,
+                              trimmed_mean, validation_band,
+                              validation_cases, validation_repeats,
+                              validation_warmup)
+from repro.validation.measure import REPEATS_ENV_VAR, WARMUP_ENV_VAR
+from repro.validation.report import (BAND_ENV_VAR, BYTES_FACTOR_ENV_VAR,
+                                     WALL_BAND_ENV_VAR, bytes_factor,
+                                     wall_band)
+from repro.workloads.scenarios import get_scenario
+
+
+# ------------------------------ twins ----------------------------------------
+def test_every_case_twin_certifies():
+    """Building a case re-runs the closed-form-vs-graph certification."""
+    for case in validation_cases():
+        assert case.name in CASE_NAMES
+        assert case.steps_per_iter == 1
+
+
+def test_serving_twin_correspondence_values():
+    """The serving twin's two halves agree on hand-checkable numbers:
+    2 layers of d=768 with a 2048-slot KV cache plus the LM head."""
+    twin = get_scenario("serving").executable_twin()
+    got = twin.assert_correspondence()
+    d, kv_len, vocab = 768, 2048, 32000
+    per_layer = (2 * d * 3 * d          # QKV (q + 2kv, n_kv == n_heads)
+                 + 4 * kv_len * d       # decode attention over the cache
+                 + 2 * d * d            # output projection
+                 + 2 * 3 * d * 3072)    # gated FFN
+    head = 2 * d + 2 * d * vocab        # embed + LM head
+    assert got["flops_per_token"] == pytest.approx(2 * per_layer + head)
+    assert got["kv_bytes_per_request"] == pytest.approx(
+        2 * 2 * kv_len * d * 2)         # layers x K&V x slots x d x bf16
+
+
+def test_twin_correspondence_catches_drift(monkeypatch):
+    """A twin whose halves disagree must refuse to certify. Both halves
+    derive from one config, so genuine construction can't drift — fake a
+    closed-form regression and prove the certification catches it."""
+    twin = get_scenario("serving").executable_twin()
+    monkeypatch.setattr(type(twin), "flops_per_token", lambda self: 123.0)
+    with pytest.raises(AssertionError):
+        twin.assert_correspondence()
+
+
+def test_unlisted_scenario_has_no_twin():
+    with pytest.raises(NotImplementedError):
+        get_scenario("llm").executable_twin()
+
+
+# ------------------------------ predictions ----------------------------------
+def test_predict_case_terms_partition_step_time():
+    for case in validation_cases():
+        p = predict_case(case, flop_rate=1e11, mem_bw=4e9)
+        assert p["flops"] > 0 and p["bytes"] > 0
+        assert p["collective_bytes"] == 0.0
+        total = p["t_compute"] + p["t_memory"] + p["t_collective"]
+        assert total == pytest.approx(p["step_time"], rel=1e-9)
+        # a one-chip plan moves no link bytes, so no collective time
+        assert p["t_collective"] == 0.0
+
+
+def test_predict_case_scales_with_host_rates():
+    """Twice the machine, at most half the time (roofline monotonicity)."""
+    case = build_case("serving")
+    slow = predict_case(case, flop_rate=5e10, mem_bw=2e9)
+    fast = predict_case(case, flop_rate=1e11, mem_bw=4e9)
+    assert fast["step_time"] == pytest.approx(slow["step_time"] / 2)
+    assert fast["flops"] == slow["flops"]      # counts are machine-free
+
+
+# ------------------------------ protocol knobs -------------------------------
+def test_protocol_env_knobs(monkeypatch):
+    monkeypatch.delenv(REPEATS_ENV_VAR, raising=False)
+    monkeypatch.delenv(WARMUP_ENV_VAR, raising=False)
+    assert validation_repeats() == 16
+    assert validation_warmup() == 2
+    monkeypatch.setenv(REPEATS_ENV_VAR, "4")
+    monkeypatch.setenv(WARMUP_ENV_VAR, "0")
+    assert validation_repeats() == 4
+    assert validation_warmup() == 0
+    monkeypatch.setenv(REPEATS_ENV_VAR, "fast")
+    with pytest.raises(ValueError, match=REPEATS_ENV_VAR):
+        validation_repeats()
+    monkeypatch.setenv(REPEATS_ENV_VAR, "0")
+    with pytest.raises(ValueError, match=REPEATS_ENV_VAR):
+        validation_repeats()
+
+
+def test_band_env_knobs(monkeypatch):
+    for var in (BAND_ENV_VAR, BYTES_FACTOR_ENV_VAR, WALL_BAND_ENV_VAR):
+        monkeypatch.delenv(var, raising=False)
+    assert validation_band() == 0.25
+    assert bytes_factor() == 24.0
+    assert wall_band() == 2.5
+    monkeypatch.setenv(BAND_ENV_VAR, "0.1")
+    assert validation_band() == 0.1
+    monkeypatch.setenv(WALL_BAND_ENV_VAR, "not-a-band")
+    with pytest.raises(ValueError, match=WALL_BAND_ENV_VAR):
+        wall_band()
+    monkeypatch.setenv(BYTES_FACTOR_ENV_VAR, "0.5")
+    with pytest.raises(ValueError, match=BYTES_FACTOR_ENV_VAR):
+        bytes_factor()
+
+
+def test_trimmed_mean():
+    assert trimmed_mean([1.0] * 10) == 1.0
+    # one outlier in ten lands in the trimmed tail
+    assert trimmed_mean([1.0] * 9 + [100.0]) == 1.0
+    assert trimmed_mean([5.0]) == 5.0
+    with pytest.raises(ValueError):
+        trimmed_mean([])
+
+
+# ------------------------------ the gate -------------------------------------
+def _row(**over):
+    predicted = {"flops": 1e9, "bytes": 1e8, "collective_bytes": 0.0,
+                 "t_compute": 0.01, "t_memory": 0.02, "t_collective": 0.0,
+                 "step_time": 0.03}
+    dry = {"flops": 1.05e9, "bytes": 1.2e9, "collective_bytes": 0.0}
+    wall = {"tpot": 0.3}
+    cal = {"flop_rate": 1e11, "mem_bw": 4e9}
+    row = build_case_report("synthetic", predicted, dry, wall, cal,
+                            wall_gate=True)
+    row["ratios"].update(over.pop("ratios", {}))
+    row.update(over)
+    return row
+
+
+def test_check_case_passes_in_band():
+    assert check_case(_row()) == []
+
+
+def test_check_case_flags_each_band():
+    bad_flops = check_case(_row(ratios={"flops": 1.5}))
+    assert any("flops" in p for p in bad_flops)
+    bad_bytes = check_case(_row(ratios={"bytes": 50.0}))
+    assert any("bytes" in p for p in bad_bytes)
+    assert any("bytes" in p
+               for p in check_case(_row(ratios={"bytes": 0.5})))
+    bad_coll = check_case(_row(collective_delta_bytes=64.0))
+    assert any("collective" in p for p in bad_coll)
+    bad_comp = check_case(_row(ratios={"compute_term": 5.0}))
+    assert any("compute" in p for p in bad_comp)
+    bad_hyb = check_case(_row(ratios={"hybrid": 10.0}))
+    assert any("hybrid" in p for p in bad_hyb)
+
+
+def test_wall_gate_flag_scopes_the_hybrid_band():
+    """Ungated cases record the hybrid ratio but are not failed on it."""
+    row = _row(ratios={"hybrid": 10.0})
+    row["wall_gate"] = False
+    assert check_case(row) == []
+    # the one-sided compute-term lower bound still applies everywhere
+    row = _row(ratios={"hybrid": 10.0, "compute_term": 5.0})
+    row["wall_gate"] = False
+    assert len(check_case(row)) == 1
+
+
+def test_hybrid_step_time_is_the_roofline_max():
+    dry = {"flops": 8e8, "bytes": 3e9}
+    assert hybrid_step_time(dry, 1e11, 4e9) == pytest.approx(3e9 / 4e9)
+    assert hybrid_step_time(dry, 1e9, 1e12) == pytest.approx(8e8 / 1e9)
+
+
+# ------------------------------ committed baseline ---------------------------
+def test_committed_baseline_passes_the_gate():
+    """BENCH_validation.json must gate green with fresh predictions —
+    the no-jax CI leg in miniature."""
+    base = load_report()
+    assert {row["case"] for row in base["cases"]} == set(CASE_NAMES)
+    rows = []
+    for brow in base["cases"]:
+        case = build_case(brow["case"])
+        cal = base["calibration"]
+        predicted = predict_case(case, cal["flop_rate"], cal["mem_bw"])
+        rows.append(build_case_report(brow["case"], predicted,
+                                      brow["dryrun"], None, None,
+                                      case.twin.wall_gate))
+    assert check_report({"cases": rows}) == []
+
+
+def test_committed_baseline_wall_ratios_recorded():
+    """The committed wall-clock channel must carry the paper's headline
+    comparison: per-term ratios present, the gated case inside the band."""
+    base = load_report()
+    wband = base["bands"]["wall_band"]
+    gated = [r for r in base["cases"] if r["wall_gate"]]
+    assert gated, "at least one case must gate the wall-clock channel"
+    for row in base["cases"]:
+        assert row["wallclock"]["tpot"] > 0
+        assert "compute_term" in row["ratios"]
+        assert "hybrid" in row["ratios"]
+    for row in gated:
+        assert 1.0 / wband <= row["ratios"]["hybrid"] <= wband
+
+
+# ------------------------------ jax channels ---------------------------------
+jax = pytest.importorskip("jax")
+
+
+def test_dryrun_channel_within_band_cheap_twin():
+    from repro.validation import measure_dryrun
+    case = build_case("mamba2")
+    dry = measure_dryrun(case)
+    assert dry["collective_bytes"] == 0.0
+    ratio = dry["flops"] / case.predicted_flops()
+    assert abs(ratio - 1.0) <= validation_band()
+    assert dry["bytes"] >= case.predicted_bytes() * 0.75
+
+
+def test_wallclock_channel_cheap_twin():
+    from repro.validation import measure_wallclock
+    case = build_case("mamba2")
+    wall = measure_wallclock(case, repeats=3, warmup=1)
+    assert wall["repeats"] == 3 and wall["tpot"] > 0
+    assert wall["ttft"] > 0 and wall["tokens_per_s"] > 0
+    assert wall["step_time_min"] <= wall["tpot"] <= wall["step_time_max"]
+
+
+def test_wallclock_window_guard():
+    from repro.validation import measure_wallclock
+    case = build_case("mamba2")
+    with pytest.raises(ValueError, match="measurement window"):
+        measure_wallclock(case, repeats=10_000, warmup=0)

@@ -1,0 +1,154 @@
+"""CI gate for the modeled-vs-measured validation loop.
+
+For every smoke serving scenario with an executable twin (`serving`,
+`mamba2`, `moe`) this gate compares the analytical prediction against the
+twin's execution and applies the declared error bands of
+`repro.validation.report`:
+
+* **dry-run channel (mandatory)** — FLOPs / DRAM bytes / collective link
+  bytes of one decode step, counted from the twin's compiled HLO by
+  `repro.launch.hlocost`. With jax importable the HLO is lowered fresh on
+  this machine; without jax the gate falls back to the *measured* numbers
+  committed in `BENCH_validation.json` and still re-derives the analytical
+  predictions from scratch — so a model-side drift fails CI even on an
+  interpreter that cannot run XLA.
+* **wall-clock channel** — steady-state TPOT on a real `ServeEngine`
+  (warmup discarded, per-step sync, trimmed mean), gated one-sided on the
+  compute term everywhere and two-sided through the hybrid roofline on
+  `wall_gate` cases. Requires jax; skipped with a visible notice
+  otherwise (CI wall clocks are noise, the committed baseline records the
+  owning machine's numbers).
+
+Exit 1 on any band violation. `--update` re-measures everything on this
+machine (jax required) and rewrites `BENCH_validation.json`.
+
+  PYTHONPATH=src python tools/check_validation.py [--update]
+                                                  [--baseline PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "src"))
+BASELINE = REPO / "BENCH_validation.json"
+
+
+def _fresh_rows(update: bool) -> tuple[list[dict], dict | None]:
+    """Measure every case on this machine (jax required). Returns
+    (case rows, calibration dict)."""
+    from repro.validation import (build_case, build_case_report,
+                                  calibrate_host, measure_dryrun,
+                                  measure_wallclock, predict_case)
+
+    cal = calibrate_host()
+    calibration = {"flop_rate": cal.flop_rate, "mem_bw": cal.mem_bw}
+    print(f"  host calibration: {cal.flop_rate / 1e9:.1f} GFLOP/s matmul, "
+          f"{cal.mem_bw / 1e9:.2f} GB/s stream")
+    rows = []
+    from repro.validation import CASE_NAMES
+    for name in CASE_NAMES:
+        case = build_case(name)        # certifies twin correspondence
+        predicted = predict_case(case, cal.flop_rate, cal.mem_bw)
+        dry = measure_dryrun(case)
+        wall = measure_wallclock(case)
+        rows.append(build_case_report(name, predicted, dry, wall,
+                                      calibration, case.twin.wall_gate))
+    return rows, calibration
+
+
+def _baseline_rows(base: dict) -> list[dict]:
+    """Re-derive predictions fresh (numpy-only), reuse the committed
+    measured numbers; drop wall-clock sections (another machine's clock
+    means nothing here — dry-run counts are machine-independent)."""
+    from repro.validation import build_case, build_case_report, predict_case
+
+    by_name = {row["case"]: row for row in base["cases"]}
+    rows = []
+    for name, brow in by_name.items():
+        case = build_case(name)
+        cal = base.get("calibration") or {}
+        predicted = predict_case(case, cal.get("flop_rate", 1e11),
+                                 cal.get("mem_bw", 4e9))
+        rows.append(build_case_report(name, predicted, brow["dryrun"],
+                                      None, None, case.twin.wall_gate))
+    return rows
+
+
+def _print_rows(rows: list[dict]) -> None:
+    for row in rows:
+        r = row["ratios"]
+        line = (f"  {row['case']:10s} flops x{r['flops']:.4f}  "
+                f"bytes x{r['bytes']:.2f}  collective Δ "
+                f"{row['collective_delta_bytes']:.0f} B")
+        if "wallclock" in row:
+            line += (f"  | TPOT {row['wallclock']['tpot'] * 1e3:.1f} ms, "
+                     f"compute-term x{r['compute_term']:.3f}, "
+                     f"hybrid x{r['hybrid']:.3f}"
+                     f"{' [gated]' if row['wall_gate'] else ''}")
+        print(line)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", type=pathlib.Path, default=BASELINE,
+                    help=f"baseline JSON (default {BASELINE})")
+    ap.add_argument("--update", action="store_true",
+                    help="re-measure on this machine and rewrite the "
+                         "baseline (jax required)")
+    args = ap.parse_args()
+
+    from repro.validation import (check_report, have_jax, validation_band,
+                                  bytes_factor, wall_band)
+
+    jax_ok = have_jax()
+    if args.update and not jax_ok:
+        print("validation gate: --update needs jax to measure; none "
+              "importable here", file=sys.stderr)
+        return 1
+
+    if jax_ok:
+        rows, calibration = _fresh_rows(args.update)
+        report = {
+            "bands": {"band": validation_band(),
+                      "bytes_factor": bytes_factor(),
+                      "wall_band": wall_band()},
+            "calibration": calibration,
+            "cases": rows,
+        }
+        if args.update:
+            args.baseline.write_text(
+                json.dumps(report, indent=2, sort_keys=True) + "\n")
+            _print_rows(rows)
+            print(f"validation baseline updated: {args.baseline}")
+            return 0
+    else:
+        print("validation gate: jax not importable — wall-clock channel "
+              "SKIPPED; gating fresh analytical predictions against the "
+              "committed measured dry-run counts")
+        if not args.baseline.exists():
+            print(f"validation gate: no baseline at {args.baseline}; run "
+                  f"--update on a jax machine first", file=sys.stderr)
+            return 1
+        base = json.loads(args.baseline.read_text())
+        report = {"cases": _baseline_rows(base)}
+
+    _print_rows(report["cases"])
+    problems = check_report(report)
+    if problems:
+        print("validation gate: FAIL", file=sys.stderr)
+        for p in problems:
+            print(f"  - {p}", file=sys.stderr)
+        return 1
+    n_wall = sum(1 for r in report["cases"] if "wallclock" in r)
+    print(f"validation gate: PASS ({len(report['cases'])} cases dry-run "
+          f"validated, {n_wall} wall-clock"
+          f"{'' if jax_ok else ' [wall clocks skipped: no jax]'})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -135,4 +135,12 @@ gate "docs freshness" \
 # tools/check_bench.py
 gate "bench regression" env PYTHONPATH=src python tools/check_bench.py
 
+# modeled-vs-measured validation: every smoke serving scenario's
+# analytical prediction gated against its executable twin's dry-run HLO
+# counts (mandatory — with jax the HLO is lowered fresh, without jax the
+# fresh predictions gate against the committed measured counts) and, on
+# jax machines, its steady-state wall clock under the hybrid-roofline
+# band — baseline BENCH_validation.json, bands in repro.validation.report
+gate "validation" env PYTHONPATH=src python tools/check_validation.py
+
 echo "ci.sh: all gates passed"
